@@ -1,0 +1,231 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) cell:
+    compute term    = FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = bytes  / (chips x 819 GB/s HBM)
+    collective term = collective bytes / (chips x 50 GB/s/link)
+
+Sources: ``compiled.cost_analysis()`` (FLOPs, bytes) and the post-SPMD HLO
+text (collective operand bytes), as recorded by repro.launch.dryrun.
+
+While-loop correction: XLA's cost analysis counts a While body ONCE, not
+times its trip count, so scan-over-layers / microbatches / time-chunks are
+undercounted.  We correct with the *analytic* model FLOPs:
+
+    MODEL_FLOPS(train)   = 6 * N_active * tokens  + 12 * L * B * S * W * H * hd
+    MODEL_FLOPS(prefill) = 2 * N_active * tokens  +  4 * L * B * S * W * H * hd
+    MODEL_FLOPS(decode)  = 2 * N_active * B       +  4 * L * B * W * H * hd
+    (W = min(S, attention window); attention-free archs drop the 2nd term)
+
+and scale the HLO bytes / collective bytes by the same structural
+multiplier (flops_analytic / flops_hlo), since the loop bodies dominate
+all three quantities.  Both raw and corrected values are reported; the
+MODEL_FLOPS/HLO ratio column is the assignment's "useful compute" metric
+evaluated on the corrected totals.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.core.hwconfig import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16)
+from repro.models.transformer import BIG_WINDOW, layer_windows
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def analytic_flops(arch: str, shape_name: str) -> Dict[str, float]:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    n_active = cfg.n_active_params()
+    n_total = cfg.n_params()
+
+    # attention window per layer (local/global patterns)
+    if cfg.arch_kind == "rwkv":
+        attn = 0.0
+    else:
+        import numpy as np
+        wins = np.asarray(layer_windows(cfg))
+        eff = np.minimum(wins, S).astype(float)
+        hdH = cfg.n_heads * cfg.hd
+        if sh.kind == "decode":
+            attn = 4.0 * B * float(eff.sum()) * hdH
+        else:
+            # sum over layers of 4 * B * S * min(S, window_l) * H * hd
+            attn = 4.0 * B * S * float(eff.sum()) * hdH
+    if cfg.arch_kind == "encdec":
+        # encoder side
+        attn += 4.0 * B * cfg.enc_frames ** 2 * cfg.n_heads * cfg.hd \
+            * cfg.n_enc_layers
+
+    tokens = B * (1 if sh.kind == "decode" else S)
+    if sh.kind == "train":
+        dense = 6.0 * n_active * tokens
+        attn *= 3.0          # fwd + bwd
+    else:
+        dense = 2.0 * n_active * tokens
+    model_flops = (6.0 if sh.kind == "train" else 2.0) * n_active * tokens
+    return {"analytic_flops": dense + attn, "model_flops": model_flops,
+            "n_active": float(n_active), "n_total": float(n_total)}
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, microbatches: int,
+                       kv_quant: bool = False) -> float:
+    """Model-level HBM traffic per step (what a fused TPU program moves).
+
+    cost_analysis()'s "bytes accessed" on the CPU-lowered HLO counts every
+    unfused intermediate, which wildly overstates HBM traffic on the TPU
+    target — so the roofline *verdict* uses this analytic model:
+
+      train   = 2reads x mb x P(bf16)  +  opt update (3r+3w fp32-ish)
+                + remat carry traffic  +  logits fwd+bwd
+      prefill = P(bf16) + activation writes + logits
+      decode  = P_active(bf16) + full KV-cache read + state r/w
+    """
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    P_act = cfg.n_active_params()
+    P_tot = cfg.n_params()
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.padded_vocab
+    tokens = B * (1 if sh.kind == "decode" else S)
+
+    if sh.kind == "train":
+        weights = 2.0 * microbatches * P_act * 2        # fwd+bwd reads
+        optimizer = 12.0 * P_tot * 4                    # adamw fp32 r/w
+        acts = 4.0 * L * tokens * D * 2                 # remat carries
+        logits = 2.0 * tokens * V * 2                   # fwd write + bwd read
+        return weights + optimizer + acts + logits
+    if sh.kind == "prefill":
+        return P_act * 2 + 2.0 * L * tokens * D * 2 + tokens * V * 2
+    # decode: weights once + whole cache read + write-back of 1 token
+    if cfg.arch_kind == "rwkv":
+        H = D // 64
+        cache = L * B * (H * 64 * 64 * 4 + 2 * D * 2) * 2   # state r/w
+    elif cfg.arch_kind == "hybrid":
+        n_attn = sum(1 for l in range(L)
+                     if cfg.block_pattern[l % len(cfg.block_pattern)]
+                     == "attn")
+        win = min(S, cfg.local_window or S)
+        cache = (n_attn * B * win * cfg.n_kv_heads * cfg.hd * 2 * 2
+                 + (L - n_attn) * B * cfg.rglru_dim * 4 * 2)
+    else:
+        import numpy as np
+        wins = np.minimum(np.asarray(layer_windows(cfg)), S)
+        kv_bytes = 1.125 if kv_quant else 2.0   # int8 + 1/hd scale
+        cache = float(wins.sum()) * B * cfg.n_kv_heads * cfg.hd * kv_bytes * 2
+        if cfg.arch_kind == "encdec":
+            cache += B * cfg.enc_frames * D * 2 * L
+    return P_act * 2 + cache + B * V * 4
+
+
+def load_cell(mesh_tag: str, arch: str, shape: str) -> Optional[dict]:
+    p = RESULTS / f"dryrun_{mesh_tag}_{arch}_{shape}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_row(arch: str, shape: str, mesh_tag: str = "16-16"
+                 ) -> Optional[dict]:
+    cell = load_cell(mesh_tag, arch, shape)
+    if cell is None or cell.get("skipped"):
+        return {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                "skipped": True,
+                "reason": (cell or {}).get("reason", "missing")}
+    chips = cell["n_chips"]
+    an = analytic_flops(arch, shape)
+    hlo_flops = max(1.0, cell["flops"]) * chips   # cost_analysis is per-dev
+    corr = max(1.0, an["analytic_flops"] / hlo_flops)
+    flops = hlo_flops * corr
+    bytes_hlo = cell["bytes_accessed"] * chips * corr
+    bytes_model = analytic_hbm_bytes(arch, shape,
+                                     cell.get("microbatches", 1),
+                                     cell.get("kv_quant", False))
+    coll = cell["collectives"]["total_bytes"] * corr
+
+    t_compute = flops / (chips * PEAK_FLOPS_BF16)
+    t_memory = bytes_model / (chips * HBM_BW)
+    t_memory_hlo = bytes_hlo / (chips * HBM_BW)
+    t_coll = coll / (chips * ICI_BW_PER_LINK)
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = t_compute / bound if bound > 0 else 0.0
+
+    suggestions = {
+        "compute": "compute-bound: already near the ideal regime; gains "
+                   "come from raising MFU (fusion, larger tiles).",
+        "memory": "HBM-bound: increase arithmetic intensity — fuse "
+                  "producer/consumer ops (PipeOrgan VMEM chaining), "
+                  "larger microbatches, or quantized KV cache.",
+        "collective": "ICI-bound: reshard to cut collective volume "
+                      "(different TP/FSDP split, overlap collectives "
+                      "with compute, bf16 gradient all-reduce).",
+    }
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh_tag, "chips": chips,
+        "hlo_flops_raw": cell["flops"],
+        "while_correction": round(corr, 1),
+        "flops_corrected": flops,
+        "bytes_hlo_corrected": bytes_hlo,
+        "bytes_hbm_model": bytes_model,
+        "collective_bytes": coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_hlo_s": t_memory_hlo,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": round(frac, 4),
+        "model_flops": an["model_flops"],
+        "model_vs_hlo": round(an["model_flops"] / flops, 4),
+        "memory_per_dev_gib": round(
+            cell["memory"].get("temp_size_in_bytes", 0) / 2**30, 2),
+        "fits_16g": cell["memory"].get("temp_size_in_bytes", 0)
+        + cell["memory"].get("argument_size_in_bytes", 0) < 16 * 2**30,
+        "next_move": suggestions[dominant],
+    }
+
+
+def full_table(mesh_tag: str = "16-16") -> List[dict]:
+    rows = []
+    for arch in sorted(ARCHS):
+        for shape in SHAPES:
+            r = roofline_row(arch, shape, mesh_tag)
+            if r is not None:
+                rows.append(r)
+    return rows
+
+
+def main() -> None:
+    for mesh_tag in ("16-16", "2-16-16"):
+        rows = full_table(mesh_tag)
+        if not any(not r.get("skipped") for r in rows):
+            continue
+        print(f"\n=== roofline ({mesh_tag}) ===")
+        hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+               f"{'t_coll':>9s} {'dom':>10s} {'frac':>6s} {'GiB/dev':>8s}")
+        print(hdr)
+        for r in rows:
+            if r.get("skipped"):
+                print(f"{r['arch']:22s} {r['shape']:12s} "
+                      f"{'SKIP (' + r['reason'][:40] + ')'}")
+                continue
+            print(f"{r['arch']:22s} {r['shape']:12s} "
+                  f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+                  f"{r['t_collective_s']:9.2e} {r['dominant']:>10s} "
+                  f"{r['roofline_fraction']:6.3f} "
+                  f"{r['memory_per_dev_gib']:8.2f}")
+    out = RESULTS / "roofline_table.json"
+    out.write_text(json.dumps({m: full_table(m)
+                               for m in ("16-16", "2-16-16")}, indent=1))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's key
+metric) and writes the full row data to benchmarks/results/summary.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig13_performance]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def _derived(name: str, rows) -> str:
+    try:
+        if name == "fig13_performance":
+            gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
+            return f"geomean_speedup_vs_tangram={gm['speedup_vs_tangram']}"
+        if name == "fig14_dram":
+            gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
+            return f"geomean_dram_ratio={gm['dram_ratio']}"
+        if name == "fig05_aw_ratios":
+            span = max(r["orders_of_magnitude"] for r in rows)
+            return f"max_aw_span_orders={span:.1f}"
+        if name == "fig15_congestion":
+            c = sum(1 for r in rows if r["congested"])
+            return f"congested_points={c}/{len(rows)}"
+        if name == "fig16_depth":
+            return "max_depth=" + str(max(r["max_depth"] for r in rows))
+        if name == "fig17_granularity":
+            m = min(r.get("min_granularity", 1 << 30) for r in rows)
+            return f"finest_granularity={m}"
+        if name == "dataflow_validation":
+            best = max(r["achieving_best_ai_pct"] for r in rows)
+            return f"best_ai_pct={best}"
+        if name == "kernel_validation":
+            e = max(r["max_err"] for r in rows)
+            return f"max_kernel_err={e:.2e}"
+        if name == "traffic_patterns":
+            return f"configs={len(rows)}"
+        if name == "fig06_skips":
+            return f"max_skips={max(r['n_skips'] for r in rows)}"
+        if name == "amp_ablation":
+            amp = [r for r in rows if r["topology"] == "amp"
+                   and r["strategy"] == "tangram-like"][0]
+            return ("tangram_on_amp_latency_vs_mesh="
+                    f"{amp['geomean_latency_vs_mesh']}")
+    except Exception:   # noqa: BLE001
+        pass
+    return f"rows={len(rows)}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.kernel_bench import kernel_validation
+    from benchmarks.xrbench_figures import FIGURES
+
+    benches = dict(FIGURES)
+    benches["kernel_validation"] = kernel_validation
+
+    summary = {}
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            print(f"{name},ERROR,{e!r}")
+            continue
+        us = (time.perf_counter() - t0) * 1e6
+        summary[name] = rows
+        print(f"{name},{us:.0f},{_derived(name, rows)}")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "summary.json").write_text(json.dumps(summary, indent=1,
+                                                     default=str))
+    if failed:
+        print(f"\n{len(failed)} benchmarks failed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""PipeOrgan spatial organization at pod scale: blocked vs striped
+pipeline-stage placement on the ICI mesh.
+
+    PYTHONPATH=src python examples/pipeline_placement.py
+"""
+from repro.distributed.pipeline import (StageOrg, choose_placement,
+                                        handoff_permutation, placement_cost)
+
+N_DEV = 16          # model-axis devices of one pod row
+BYTES = 64 * 2048 * 2   # one microbatch activation handoff
+
+print(f"{'stages':>7s} {'org':>8s} {'max_hops':>9s} {'worst_link_B':>13s} "
+      f"{'handoff_us':>11s}")
+for n_stages in (2, 4, 8):
+    for org in (StageOrg.BLOCKED, StageOrg.STRIPED):
+        c = placement_cost(org, n_stages, N_DEV, float(BYTES))
+        print(f"{n_stages:7d} {org.value:>8s} {c['max_hops']:9d} "
+              f"{c['worst_link_bytes']:13.0f} "
+              f"{c['handoff_seconds']*1e6:11.3f}")
+
+print("\npermutations (4 stages, 16 devices):")
+print("  blocked:", handoff_permutation(StageOrg.BLOCKED, 4, N_DEV)[:6], "...")
+print("  striped:", handoff_permutation(StageOrg.STRIPED, 4, N_DEV)[:6], "...")
+
+print("\nplacement choice (Sec. IV-B at pod scale):")
+print("  pipelining-dominated ->",
+      choose_placement(4, N_DEV, 1e9, 1e6).value)
+print("  TP-collective-dominated ->",
+      choose_placement(4, N_DEV, 1e6, 1e9).value)

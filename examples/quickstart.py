@@ -1,0 +1,28 @@
+"""Quickstart: plan a model with PipeOrgan and inspect the decisions.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.xrbench import eye_segmentation
+from repro.core import (PAPER_HW, Topology, plan_pipeorgan,
+                        plan_tangram_like)
+
+graph = eye_segmentation()          # RITNet-style DAG (77 ops, dense skips)
+print(f"model: {graph.name} | ops={len(graph.ops)} "
+      f"skips={len(graph.skip_edges())}")
+
+plan = plan_pipeorgan(graph, PAPER_HW, Topology.AMP)
+print(f"\nPipeOrgan plan ({len(plan.segments)} segments):")
+for seg in plan.segments[:8]:
+    names = [o.name for o in seg.ops]
+    print(f"  depth={seg.segment.depth:2d} org={seg.org and seg.org.value} "
+          f"lat={seg.cost.latency_cycles:9.3e}cy "
+          f"ops={names[0]}..{names[-1]}")
+print("  ...")
+
+baseline = plan_tangram_like(graph, PAPER_HW)
+print(f"\nlatency:  pipeorgan={plan.latency_cycles:.3e} cycles | "
+      f"tangram-like={baseline.latency_cycles:.3e}  "
+      f"(speedup {baseline.latency_cycles / plan.latency_cycles:.2f}x)")
+print(f"DRAM:     pipeorgan={plan.dram_bytes:.3e} B | "
+      f"tangram-like={baseline.dram_bytes:.3e}  "
+      f"(ratio {plan.dram_bytes / baseline.dram_bytes:.2f})")

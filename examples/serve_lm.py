@@ -1,0 +1,49 @@
+"""Serve a small model with batched greedy decoding + int8 KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --tokens 32 --kv-quant
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_cache, init_model
+from repro.runtime.steps import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)  # reduced config on CPU
+    if args.kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_serve_step(cfg))
+
+    B, T = args.batch, args.tokens + 8
+    cache = init_cache(cfg, B, T)
+    toks = jnp.ones((B, 1), jnp.int32)
+    generated = [toks]
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        toks, cache = step(params, toks, cache, jnp.int32(i))
+        generated.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    seq = jnp.concatenate(generated, axis=1)
+    print(f"arch={cfg.name} kv_quant={cfg.kv_quant}")
+    print(f"generated {args.tokens} tokens x batch {B} in {dt*1e3:.1f} ms "
+          f"({args.tokens*B/dt:.0f} tok/s on CPU smoke config)")
+    print("sample:", seq[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

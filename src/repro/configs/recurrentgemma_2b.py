@@ -1,0 +1,16 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attention, 1 attn : 2 recurrent pattern.
+[arXiv:2402.19427; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", arch_kind="hybrid", n_layers=26, d_model=2560,
+    n_heads=10, n_kv_heads=1, d_ff=7680, vocab=256000, head_dim=256,
+    block_pattern=("rglru", "rglru", "attn"), rglru_dim=2560,
+    local_window=2048, conv1d_width=4)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-2b-smoke", arch_kind="hybrid", n_layers=3,
+    d_model=64, n_heads=4, n_kv_heads=1, d_ff=128, vocab=512, head_dim=16,
+    block_pattern=("rglru", "rglru", "attn"), rglru_dim=64,
+    local_window=8, conv1d_width=4)

@@ -1,0 +1,11 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536 — Finch, data-dependent decay.  [arXiv:2404.05892; unverified]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", arch_kind="rwkv", n_layers=24, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_ff=7168, vocab=65536)
+
+SMOKE = ModelConfig(
+    name="rwkv6-1.6b-smoke", arch_kind="rwkv", n_layers=2, d_model=128,
+    n_heads=2, n_kv_heads=2, d_ff=256, vocab=512)

@@ -1,0 +1,37 @@
+"""PipeOrgan core: the paper's primary contribution.
+
+Stage 1 — pipelined-dataflow optimization (HW-agnostic):
+  graph.py        operator-DAG IR (einsum ops, skip connections)
+  depth.py        variable pipeline-depth heuristic (Sec. IV-A)
+  dataflow.py     intra-operator loop-order selection (A/W-ratio heuristic)
+  granularity.py  Alg. 1 — finest pipelining granularity
+
+Stage 2 — HW mapping and NoC architecture:
+  spatial.py      blocked/striped/checkerboard spatial organizations
+  noc.py          mesh/AMP/torus/flattened-butterfly traffic analysis
+  pipeline_model.py  Fig. 3 interval latency + energy model
+  planner.py      end-to-end flow + TANGRAM-like / SIMBA-like baselines
+"""
+from .dataflow import Dataflow, choose_dataflow, best_case_arithmetic_intensity
+from .depth import Segment, segment_depths, segment_graph
+from .granularity import Granularity, finest_granularity
+from .graph import Graph, Op, OpKind, add, chain, concat, conv, dwconv, gemm
+from .hwconfig import HWConfig, PAPER_HW, TPU_V5E
+from .noc import Flow, Topology, TrafficStats, analyze, segment_flows
+from .pipeline_model import SegmentCost, segment_cost
+from .planner import (PlanResult, SegmentPlan, STRATEGIES, plan_layer_by_layer,
+                      plan_pipeorgan, plan_simba_like, plan_tangram_like)
+from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
+
+__all__ = [
+    "Dataflow", "choose_dataflow", "best_case_arithmetic_intensity",
+    "Segment", "segment_depths", "segment_graph",
+    "Granularity", "finest_granularity",
+    "Graph", "Op", "OpKind", "add", "chain", "concat", "conv", "dwconv",
+    "gemm", "HWConfig", "PAPER_HW", "TPU_V5E",
+    "Flow", "Topology", "TrafficStats", "analyze", "segment_flows",
+    "SegmentCost", "segment_cost",
+    "PlanResult", "SegmentPlan", "STRATEGIES", "plan_layer_by_layer",
+    "plan_pipeorgan", "plan_simba_like", "plan_tangram_like",
+    "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org", "place",
+]

@@ -1,0 +1,97 @@
+"""Stage-1: pipeline-depth heuristic — Sec. III-A / IV-A.
+
+"We determine depth of a segment (starting at layer l) by comparing the
+memory footprints A_l + A_{l+D} with sum_{i=l}^{l+D} W_i, increasing the
+value of D.  We stop adding more depth the moment sum W_i is greater.  In
+case of skip connections we also add additional activations due to skip
+connections [to the activation side] ... We also cut the depth if we
+encounter a complex layer like ROIAlign.  The depth is also limited by the
+size of the substrate: the maximum depth we consider is sqrt(numPEs)."
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from .graph import Graph, COMPLEX_KINDS
+from .hwconfig import HWConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A pipeline segment: ops[start:stop] (topological indices)."""
+    start: int
+    stop: int  # exclusive
+
+    @property
+    def depth(self) -> int:
+        return self.stop - self.start
+
+    def __contains__(self, idx: int) -> bool:
+        return self.start <= idx < self.stop
+
+
+def _activation_footprint(g: Graph, start: int, stop: int) -> int:
+    """A_l + A_{l+D} + skip activations crossing the segment boundary.
+
+    Sec. III-A: activations interior to the segment are forwarded
+    producer->consumer (granularity-sized), so only the segment's external
+    input, its final output, and every skip-connection activation with one
+    endpoint outside (start, stop) count.
+    """
+    ops = g.ops
+    a_in = ops[start].input_volume()
+    a_out = ops[stop - 1].output_volume()
+    skips = 0
+    for p, c in g.skip_edges():
+        crosses = (p < start <= c < stop) or (start <= p < stop <= c)
+        if crosses:
+            skips += ops[p].output_volume()
+    return a_in + a_out + skips
+
+
+def _weight_footprint(g: Graph, start: int, stop: int) -> int:
+    return sum(op.weight_volume() for op in g.ops[start:stop])
+
+
+def segment_graph(g: Graph, hw: HWConfig) -> List[Segment]:
+    """Greedy variable-depth segmentation of the model DAG."""
+    segs: List[Segment] = []
+    n = len(g.ops)
+    l = 0
+    max_depth = hw.max_depth
+    while l < n:
+        # a complex layer runs alone (depth cut on both sides)
+        if g.ops[l].kind in COMPLEX_KINDS:
+            segs.append(Segment(l, l + 1))
+            l += 1
+            continue
+        stop = l + 1
+        while stop < n:
+            nxt = g.ops[stop]
+            if nxt.kind in COMPLEX_KINDS:
+                break
+            if (stop + 1 - l) > max_depth:
+                break
+            # the candidate's input must come from inside the segment,
+            # otherwise there is no producer->consumer stream to pipeline
+            if nxt.inputs and not any(
+                    l <= g.index(s) < stop for s in nxt.inputs):
+                break
+            act = _activation_footprint(g, l, stop + 1)
+            wgt = _weight_footprint(g, l, stop + 1)
+            if wgt > act:
+                break  # "the moment sum W_i is greater"
+            stop += 1
+        segs.append(Segment(l, stop))
+        l = stop
+    return segs
+
+
+def segment_depths(g: Graph, hw: HWConfig) -> List[int]:
+    """Per-layer depth labels (Fig. 16)."""
+    labels = [0] * len(g.ops)
+    for seg in segment_graph(g, hw):
+        for i in range(seg.start, seg.stop):
+            labels[i] = seg.depth
+    return labels

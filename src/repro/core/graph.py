@@ -1,0 +1,248 @@
+"""Operator-DAG IR for PipeOrgan.
+
+The paper treats a DNN as a DAG of einsum-style operators (conv, depthwise
+conv, GEMM) plus "complex" non-einsum layers (ROIAlign, pooling, elementwise
+adds for skip connections).  Ops carry their full dimension tuples so the
+analysis layer can compute activation/weight volumes, MACs and loop-nest
+ranks exactly as Sec. II-A describes.
+
+Volumes are in *elements*; multiply by ``bytes_per_word`` (Table III: 1 B)
+at the cost-model layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class OpKind(enum.Enum):
+    CONV = "conv"          # O[n,p,q,k] += I[n,p+r,q+s,c] * W[r,s,c,k]
+    DWCONV = "dwconv"      # O[n,p,q,c] += I[n,p+r,q+s,c] * W[r,s,c]
+    GEMM = "gemm"          # O[m,n]    += A[m,k] * B[k,n]
+    POOL = "pool"          # windowed reduction, no weights
+    ADD = "add"            # elementwise (skip-connection join)
+    CONCAT = "concat"      # channel concat (DenseNet-style skip join)
+    ROIALIGN = "roialign"  # complex layer -> pipeline cut (Sec. IV-A)
+    UPSAMPLE = "upsample"  # nearest/bilinear upsample, no weights
+    GLOBALPOOL = "globalpool"
+
+
+#: kinds at which the depth heuristic must cut the pipeline segment.
+COMPLEX_KINDS = frozenset({OpKind.ROIALIGN})
+
+#: kinds that carry no weights (pure data movers / reductions).
+WEIGHTLESS_KINDS = frozenset(
+    {OpKind.POOL, OpKind.ADD, OpKind.CONCAT, OpKind.UPSAMPLE,
+     OpKind.GLOBALPOOL, OpKind.ROIALIGN}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One operator node.
+
+    dims for CONV/DWCONV: {N,H,W,C,K,R,S} (output H,W post-stride).
+    dims for GEMM:        {M,N,K}.
+    ``inputs``: names of producer ops whose *output activation* this op
+    consumes.  len(inputs) > 1 encodes a skip-connection join.
+    """
+
+    name: str
+    kind: OpKind
+    dims: Dict[str, int]
+    inputs: Tuple[str, ...] = ()
+    stride: int = 1
+
+    # ---- volumes (elements) -------------------------------------------------
+    def weight_volume(self) -> int:
+        d = self.dims
+        if self.kind == OpKind.CONV:
+            return d["R"] * d["S"] * d["C"] * d["K"]
+        if self.kind == OpKind.DWCONV:
+            return d["R"] * d["S"] * d["C"]
+        if self.kind == OpKind.GEMM:
+            return d["K"] * d["N"]
+        return 0
+
+    def output_volume(self) -> int:
+        d = self.dims
+        if self.kind in (OpKind.CONV,):
+            return d["N"] * d["H"] * d["W"] * d["K"]
+        if self.kind in (OpKind.DWCONV, OpKind.POOL, OpKind.ADD,
+                         OpKind.UPSAMPLE):
+            return d["N"] * d["H"] * d["W"] * d["C"]
+        if self.kind == OpKind.CONCAT:
+            return d["N"] * d["H"] * d["W"] * d["C"]  # C = concat total
+        if self.kind == OpKind.GLOBALPOOL:
+            return d["N"] * d["C"]
+        if self.kind == OpKind.GEMM:
+            return d["M"] * d["N"]
+        if self.kind == OpKind.ROIALIGN:
+            return d["N"] * d["H"] * d["W"] * d["C"]
+        raise ValueError(self.kind)
+
+    def input_volume(self) -> int:
+        """Volume of the activation(s) consumed (pre-stride spatial)."""
+        d = self.dims
+        if self.kind == OpKind.CONV:
+            return d["N"] * d["H"] * self.stride * d["W"] * self.stride * d["C"]
+        if self.kind in (OpKind.DWCONV, OpKind.POOL):
+            return d["N"] * d["H"] * self.stride * d["W"] * self.stride * d["C"]
+        if self.kind == OpKind.GEMM:
+            return d["M"] * d["K"]
+        if self.kind in (OpKind.ADD, OpKind.CONCAT):
+            return self.output_volume()  # per-input share handled by caller
+        if self.kind == OpKind.UPSAMPLE:
+            return self.output_volume() // max(1, self.stride * self.stride)
+        if self.kind == OpKind.GLOBALPOOL:
+            return d["N"] * d["H"] * d["W"] * d["C"]
+        if self.kind == OpKind.ROIALIGN:
+            return d["N"] * d["H"] * d["W"] * d["C"]
+        raise ValueError(self.kind)
+
+    def macs(self) -> int:
+        d = self.dims
+        if self.kind == OpKind.CONV:
+            return d["N"] * d["H"] * d["W"] * d["K"] * d["C"] * d["R"] * d["S"]
+        if self.kind == OpKind.DWCONV:
+            return d["N"] * d["H"] * d["W"] * d["C"] * d["R"] * d["S"]
+        if self.kind == OpKind.GEMM:
+            return d["M"] * d["N"] * d["K"]
+        # weightless ops: one "mac" per output element (cheap, keeps the
+        # load-balancer from dividing by zero)
+        return self.output_volume()
+
+    def activation_volume(self) -> int:
+        return self.input_volume() + self.output_volume()
+
+    def aw_ratio(self) -> float:
+        w = self.weight_volume()
+        if w == 0:
+            return float("inf")
+        return self.activation_volume() / w
+
+    # ---- loop-nest ranks (Sec. II-A) ---------------------------------------
+    def output_ranks(self) -> Tuple[str, ...]:
+        if self.kind == OpKind.CONV:
+            return ("N", "H", "W", "K")
+        if self.kind in (OpKind.DWCONV, OpKind.POOL, OpKind.ADD,
+                         OpKind.CONCAT, OpKind.UPSAMPLE):
+            return ("N", "H", "W", "C")
+        if self.kind == OpKind.GEMM:
+            return ("M", "N")
+        if self.kind == OpKind.GLOBALPOOL:
+            return ("N", "C")
+        return ("N", "H", "W", "C")
+
+    def contracted_ranks(self) -> Tuple[str, ...]:
+        if self.kind == OpKind.CONV:
+            return ("C", "R", "S")
+        if self.kind == OpKind.DWCONV:
+            return ("R", "S")
+        if self.kind == OpKind.GEMM:
+            return ("K",)
+        return ()
+
+    def all_ranks(self) -> Tuple[str, ...]:
+        return tuple(dict.fromkeys(self.output_ranks() + self.contracted_ranks()))
+
+
+@dataclasses.dataclass
+class Graph:
+    """A model DAG in topological order."""
+
+    name: str
+    ops: List[Op]
+
+    def __post_init__(self) -> None:
+        self._index = {op.name: i for i, op in enumerate(self.ops)}
+        if len(self._index) != len(self.ops):
+            raise ValueError(f"duplicate op names in graph {self.name}")
+        for op in self.ops:
+            for src in op.inputs:
+                if src not in self._index:
+                    raise ValueError(f"{op.name} consumes unknown op {src}")
+                if self._index[src] >= self._index[op.name]:
+                    raise ValueError(
+                        f"graph {self.name} not topologically ordered: "
+                        f"{op.name} <- {src}")
+
+    def index(self, name: str) -> int:
+        return self._index[name]
+
+    def op(self, name: str) -> Op:
+        return self.ops[self._index[name]]
+
+    def consumers(self, name: str) -> List[Op]:
+        return [o for o in self.ops if name in o.inputs]
+
+    # ---- skip-connection census (Fig. 6) ------------------------------------
+    def skip_edges(self) -> List[Tuple[int, int]]:
+        """(producer_idx, consumer_idx) pairs with reuse distance > 1."""
+        out = []
+        for op in self.ops:
+            ci = self._index[op.name]
+            for src in op.inputs:
+                pi = self._index[src]
+                if ci - pi > 1:
+                    out.append((pi, ci))
+        return sorted(out)
+
+    def reuse_distances(self) -> List[int]:
+        return [c - p for p, c in self.skip_edges()]
+
+    def skip_density(self) -> float:
+        if not self.ops:
+            return 0.0
+        return len(self.skip_edges()) / len(self.ops)
+
+    # ---- totals -------------------------------------------------------------
+    def total_macs(self) -> int:
+        return sum(op.macs() for op in self.ops)
+
+    def total_weights(self) -> int:
+        return sum(op.weight_volume() for op in self.ops)
+
+
+def chain(name: str, ops: Sequence[Op]) -> Graph:
+    """Wire a plain chain (each op consumes its predecessor) into a Graph."""
+    wired: List[Op] = []
+    prev: Optional[str] = None
+    for op in ops:
+        if prev is not None and not op.inputs:
+            op = dataclasses.replace(op, inputs=(prev,))
+        wired.append(op)
+        prev = op.name
+    return Graph(name, wired)
+
+
+def conv(name: str, n: int, h: int, w: int, c: int, k: int, r: int = 3,
+         s: Optional[int] = None, stride: int = 1,
+         inputs: Tuple[str, ...] = ()) -> Op:
+    return Op(name, OpKind.CONV,
+              dict(N=n, H=h, W=w, C=c, K=k, R=r, S=s if s is not None else r),
+              inputs=inputs, stride=stride)
+
+
+def dwconv(name: str, n: int, h: int, w: int, c: int, r: int = 3,
+           stride: int = 1, inputs: Tuple[str, ...] = ()) -> Op:
+    return Op(name, OpKind.DWCONV, dict(N=n, H=h, W=w, C=c, R=r, S=r),
+              inputs=inputs, stride=stride)
+
+
+def gemm(name: str, m: int, n: int, k: int,
+         inputs: Tuple[str, ...] = ()) -> Op:
+    return Op(name, OpKind.GEMM, dict(M=m, N=n, K=k), inputs=inputs)
+
+
+def add(name: str, n: int, h: int, w: int, c: int,
+        inputs: Tuple[str, ...] = ()) -> Op:
+    return Op(name, OpKind.ADD, dict(N=n, H=h, W=w, C=c), inputs=inputs)
+
+
+def concat(name: str, n: int, h: int, w: int, c_total: int,
+           inputs: Tuple[str, ...] = ()) -> Op:
+    return Op(name, OpKind.CONCAT, dict(N=n, H=h, W=w, C=c_total),
+              inputs=inputs)

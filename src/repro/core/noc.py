@@ -1,0 +1,265 @@
+"""Cycle-approximate NoC model: mesh, AMP, torus, flattened butterfly.
+
+Automates the traffic analysis drawn by hand in Figs. 8-12: given a
+``Placement`` and per-interval communication volumes it derives per-link
+channel loads, hop counts, congestion and energy.
+
+Latency rule (Sec. VI-C / Fig. 15): an interval is congestion-free when the
+compute interval >= worst-case channel load (in cycles; 1 word/link/cycle).
+When congested, "the overall interval delay is worst-case channel load x
+compute interval".
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import defaultdict
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from .hwconfig import HWConfig
+from .spatial import Placement
+
+Coord = Tuple[int, int]
+Link = Tuple[Coord, Coord]
+
+
+class Topology(enum.Enum):
+    MESH = "mesh"
+    AMP = "amp"
+    TORUS = "torus"
+    FLATTENED_BUTTERFLY = "flattened_butterfly"
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    src: Coord
+    dst: Coord
+    words: float  # words per pipeline interval
+
+
+@dataclasses.dataclass
+class TrafficStats:
+    topology: Topology
+    worst_channel_load: float      # words/interval through the hottest link
+    total_hop_words: float         # sum over flows of words * hops
+    total_wire_words: float        # sum over flows of words * wire length
+    max_path_hops: int
+    num_links_used: int
+    link_count: int                # total links in the topology
+
+    def interval_comm_delay(self, compute_interval: float) -> float:
+        """Paper's Fig. 15 rule, with a physical serialization ceiling.
+
+        Congestion-free when load <= compute interval.  When congested the
+        paper models backlog feedback as load x interval (matches its
+        worked example: load 8, interval 2 -> delay 16); we cap it at the
+        store-and-forward serialization bound load + hops + interval, which
+        the backlog cannot physically exceed at 1 word/link/cycle.
+        """
+        load = self.worst_channel_load
+        if load <= compute_interval:
+            return compute_interval
+        # burst-model loads are O(block height), so the paper's backlog
+        # formula stays bounded; retain the store-and-forward ceiling for
+        # the rare coarse burst.
+        return min(load * max(1.0, compute_interval),
+                   max(load * 2.0, load + self.max_path_hops
+                       + compute_interval))
+
+    def congested(self, compute_interval: float) -> bool:
+        return self.worst_channel_load > compute_interval
+
+    def hop_energy(self, hw: HWConfig) -> float:
+        # router traversal + wire energy proportional to physical length
+        return hw.e_hop * (0.5 * self.total_hop_words
+                           + 0.5 * self.total_wire_words)
+
+
+def _steps_1d(delta: int, size: int, topology: Topology,
+              express: int) -> List[int]:
+    """Decompose a 1-D displacement into per-hop strides."""
+    steps: List[int] = []
+    if topology == Topology.TORUS and abs(delta) > size // 2:
+        delta = delta - size * (1 if delta > 0 else -1)
+    sign = 1 if delta >= 0 else -1
+    rem = abs(delta)
+    if topology == Topology.AMP and express > 1:
+        while rem >= express:
+            steps.append(sign * express)
+            rem -= express
+    while rem > 0:
+        steps.append(sign)
+        rem -= 1
+    return steps
+
+
+def route(src: Coord, dst: Coord, rows: int, cols: int,
+          topology: Topology, express: int) -> List[Link]:
+    """Dimension-ordered (X then Y) routing; returns directed links."""
+    links: List[Link] = []
+    r, c = src
+    if topology == Topology.FLATTENED_BUTTERFLY:
+        if c != dst[1]:
+            links.append(((r, c), (r, dst[1])))
+            c = dst[1]
+        if r != dst[0]:
+            links.append(((r, c), (dst[0], c)))
+        return links
+    for s in _steps_1d(dst[1] - c, cols, topology, express):
+        nc = (c + s) % cols if topology == Topology.TORUS else c + s
+        links.append(((r, c), (r, nc)))
+        c = nc
+    for s in _steps_1d(dst[0] - r, rows, topology, express):
+        nr = (r + s) % rows if topology == Topology.TORUS else r + s
+        links.append(((r, c), (nr, c)))
+        r = nr
+    return links
+
+
+def _link_len(link: Link, rows: int, cols: int, topology: Topology) -> int:
+    (r1, c1), (r2, c2) = link
+    dr, dc = abs(r2 - r1), abs(c2 - c1)
+    if topology == Topology.TORUS:
+        dr = min(dr, rows - dr)
+        dc = min(dc, cols - dc)
+    return max(dr, dc)
+
+
+def topology_link_count(rows: int, cols: int, topology: Topology,
+                        express: int) -> int:
+    mesh = rows * (cols - 1) + cols * (rows - 1)
+    if topology == Topology.MESH:
+        return mesh
+    if topology == Topology.TORUS:
+        return mesh + rows + cols
+    if topology == Topology.AMP:
+        # one express link of length `express` per PE per direction where it
+        # fits (Sec. IV-D: < 2x the links of mesh, O(sqrt N) length)
+        ex = rows * max(0, cols - express) + cols * max(0, rows - express)
+        return mesh + ex
+    if topology == Topology.FLATTENED_BUTTERFLY:
+        # all-to-all within each row and each column: O(N log N)-ish
+        return (rows * cols * (cols - 1) // 2) + (cols * rows * (rows - 1) // 2)
+    raise ValueError(topology)
+
+
+def analyze(flows: Sequence[Flow], hw: HWConfig, topology: Topology
+            ) -> TrafficStats:
+    rows, cols = hw.pe_rows, hw.pe_cols
+    express = hw.amp_link_len if topology == Topology.AMP else 1
+    load: Dict[object, float] = defaultdict(float)
+    ingress_port: Dict[Coord, int] = defaultdict(int)
+    total_hop_words = 0.0
+    total_wire_words = 0.0
+    max_hops = 0
+    for f in flows:
+        if f.src == f.dst or f.words <= 0:
+            continue
+        path = route(f.src, f.dst, rows, cols, topology, express)
+        max_hops = max(max_hops, len(path))
+        total_hop_words += f.words * len(path)
+        for i, link in enumerate(path):
+            key: object = link
+            if i == len(path) - 1:
+                # adaptive last-hop: flows converging on one consumer PE
+                # arbitrate across its (up to) 4 ingress ports
+                port = ingress_port[f.dst] % 4
+                ingress_port[f.dst] += 1
+                key = (f.dst, "in", port)
+            load[key] += f.words
+            total_wire_words += f.words * _link_len(link, rows, cols, topology)
+    worst = max(load.values()) if load else 0.0
+    return TrafficStats(
+        topology=topology,
+        worst_channel_load=worst,
+        total_hop_words=total_hop_words,
+        total_wire_words=total_wire_words,
+        max_path_hops=max_hops,
+        num_links_used=len(load),
+        link_count=topology_link_count(rows, cols, topology, express),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Traffic generation from a placement
+# ---------------------------------------------------------------------------
+
+def _rowmajor(coords: np.ndarray) -> List[Coord]:
+    return [tuple(x) for x in coords[np.lexsort((coords[:, 1], coords[:, 0]))]]
+
+
+def pair_flows(placement: Placement, src_slot: int, dst_slot: int,
+               words_per_interval: float) -> List[Flow]:
+    """Producer->consumer unicast flows for one layer pair.
+
+    Fine-grained organizations constrain the consumer's parallelization to
+    match the producer's (Sec. IV-B), so each producer PE feeds its
+    *nearest* consumer PE — in a striped/checkerboard placement that is the
+    adjacent stripe/cell (Fig. 10: congestion-free single hops).
+    """
+    src_a = placement.pes_of(src_slot)
+    dst_a = placement.pes_of(dst_slot)
+    if src_a.size == 0 or dst_a.size == 0:
+        return []
+    # manhattan-nearest consumer for every producer PE (numpy broadcast)
+    d = (np.abs(src_a[:, None, 0] - dst_a[None, :, 0])
+         + np.abs(src_a[:, None, 1] - dst_a[None, :, 1]))
+    nearest = np.argmin(d, axis=1)
+    per_src = words_per_interval / len(src_a)
+    return [Flow((int(s[0]), int(s[1])),
+                 (int(dst_a[j][0]), int(dst_a[j][1])), per_src)
+            for s, j in zip(src_a, nearest)]
+
+
+def multicast_flows(placement: Placement, src_slot: int, dst_slot: int,
+                    words_per_interval: float) -> List[Flow]:
+    """Blocked-organization traffic: store-and-forward multicast chains.
+
+    With a blocked allocation the consumer keeps its own (flexible)
+    intra-op parallelization, so an intermediate word is needed by *many*
+    consumer PEs (e.g. an input-stationary consumer spreads output channels
+    over its whole block).  Each producer PE's words enter the consumer
+    block and are forwarded PE-to-PE down the consumer PEs of its column
+    (Figs. 8-9: the long overlapping vertical paths).  Fine-grained
+    interleavings instead constrain the consumer to consume exactly what
+    its neighbour produced (Sec. IV-B), which is the unicast `pair_flows`.
+    """
+    src = _rowmajor(placement.pes_of(src_slot))
+    dst = placement.pes_of(dst_slot)
+    if not src or dst.size == 0:
+        return []
+    by_col: Dict[int, List[Coord]] = {}
+    for r, c in dst:
+        by_col.setdefault(int(c), []).append((int(r), int(c)))
+    cols = sorted(by_col)
+    per_src = words_per_interval / len(src)
+    flows: List[Flow] = []
+    for s in src:
+        col = min(cols, key=lambda c: abs(c - s[1]))
+        chain = sorted(by_col[col], key=lambda d: abs(d[0] - s[0]))
+        hop_from = s
+        # enter at the nearest consumer PE then forward through the rest of
+        # the column ordered by distance (a vertical store-and-forward walk)
+        for d in chain:
+            flows.append(Flow(hop_from, d, per_src))
+            hop_from = d
+    return flows
+
+
+def segment_flows(placement: Placement,
+                  interval_words: Sequence[float],
+                  skip_pairs: Iterable[Tuple[int, int, float]] = ()
+                  ) -> List[Flow]:
+    """All flows of a pipeline segment.
+
+    interval_words[i]: words/interval from slot i to slot i+1.
+    skip_pairs: (src_slot, dst_slot, words/interval) for skip connections.
+    """
+    flows: List[Flow] = []
+    for i, w in enumerate(interval_words):
+        flows.extend(pair_flows(placement, i, i + 1, w))
+    for s, t, w in skip_pairs:
+        flows.extend(pair_flows(placement, s, t, w))
+    return flows

@@ -1,0 +1,312 @@
+"""End-to-end PipeOrgan planner (Fig. 7 flow) + baseline dataflows.
+
+Stage 1 (HW-agnostic): segment the DAG by the depth heuristic, choose
+intra-op dataflows from A/W ratios, derive the finest granularity (Alg. 1).
+
+Stage 2 (HW mapping): allocate PEs per layer by MAC ratio, choose the
+spatial organization from (depth, granularity, RF sizes), generate the
+segment's NoC traffic (incl. skip connections and unequal allocations) and
+evaluate latency/energy/DRAM via the Fig. 3 model on a chosen topology.
+
+Baselines (Sec. V-C):
+  * TANGRAM-like — fine-grained pipelining at fixed depth=2, alternating
+    output-/input-stationary dataflows, blocked spatial allocation.
+  * SIMBA-like   — parallelize C and K; pipeline (depth 2, blocked) only
+    when C*K cannot utilize the substrate; otherwise layer-by-layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .dataflow import Dataflow, choose_dataflow
+from .depth import Segment, segment_graph
+from .graph import Graph, Op, OpKind
+from .granularity import Granularity, finest_granularity
+from .hwconfig import HWConfig
+from .noc import (Topology, TrafficStats, analyze, multicast_flows,
+                  pair_flows, segment_flows)
+from .pipeline_model import SegmentCost, op_work, segment_cost
+from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
+
+
+@dataclasses.dataclass
+class SegmentPlan:
+    segment: Segment
+    ops: List[Op]
+    dataflows: List[Dataflow]
+    granularities: List[Granularity]
+    pe_alloc: List[int]
+    org: Optional[SpatialOrg]
+    placement: Optional[Placement]
+    noc: Optional[TrafficStats]
+    cost: SegmentCost
+
+
+@dataclasses.dataclass
+class PlanResult:
+    graph_name: str
+    strategy: str
+    topology: Topology
+    segments: List[SegmentPlan]
+
+    @property
+    def latency_cycles(self) -> float:
+        return sum(s.cost.latency_cycles for s in self.segments)
+
+    @property
+    def dram_bytes(self) -> float:
+        return sum(s.cost.dram_bytes for s in self.segments)
+
+    @property
+    def energy(self) -> float:
+        return sum(s.cost.total_energy for s in self.segments)
+
+    @property
+    def compute_lower_bound(self) -> float:
+        return sum(s.cost.compute_cycles for s in self.segments)
+
+    def depth_labels(self) -> List[int]:
+        labels: List[int] = []
+        for s in self.segments:
+            labels.extend([s.segment.depth] * s.segment.depth)
+        return labels
+
+
+# ---------------------------------------------------------------------------
+
+
+def _segment_skip_traffic(g: Graph, seg: Segment
+                          ) -> Tuple[List[Tuple[int, int, int]], float]:
+    """(intra-segment skip slot pairs with volume), crossing bytes."""
+    intra: List[Tuple[int, int, int]] = []
+    crossing = 0
+    for p, c in g.skip_edges():
+        vol = g.ops[p].output_volume()
+        if p in seg and c in seg:
+            intra.append((p - seg.start, c - seg.start, vol))
+        elif (p in seg) != (c in seg):
+            crossing += vol
+    return intra, crossing
+
+
+def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
+                  dataflow_fn, force_org: Optional[SpatialOrg],
+                  force_gb: Optional[bool],
+                  util_fn=None, traffic_scale: float = 1.0) -> SegmentPlan:
+    ops = g.ops[seg.start:seg.stop]
+    budget = hw.sram_bytes // max(1, seg.depth)
+    dfs = [dataflow_fn(op, hw, i, budget) for i, op in enumerate(ops)]
+    grans = [finest_granularity(ops[j], dfs[j], ops[j + 1], dfs[j + 1])
+             for j in range(len(ops) - 1)]
+
+    # substrate under-utilization (e.g. SIMBA-like can only spread C and K):
+    # an op that cannot fill its partition runs on fewer effective PEs
+    usable = hw.num_pes
+    if util_fn is not None:
+        usable = max(1, int(hw.num_pes
+                            * min(util_fn(op, hw) for op in ops)))
+    pe_alloc = allocate_pes([max(1.0, op_work(op, hw)) for op in ops],
+                            usable)
+
+    intra_skips, crossing = _segment_skip_traffic(g, seg)
+    ext_in = ops[0].input_volume() * hw.bytes_per_word
+    ext_out = ops[-1].output_volume() * hw.bytes_per_word
+    skip_in = crossing * hw.bytes_per_word
+
+    if seg.depth == 1:
+        cost = segment_cost(ops, dfs, grans, pe_alloc, hw, None, True,
+                            ext_in, ext_out, skip_in, array_pes=usable)
+        return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc,
+                           None, None, None, cost)
+
+    # organization choice
+    gran_bytes = max(gr.elements for gr in grans) * hw.bytes_per_word
+    mean_pes = max(1, hw.num_pes // seg.depth)
+    if force_org is not None:
+        org = force_org
+        via_gb = force_gb if force_gb is not None else False
+    else:
+        org, via_gb = choose_spatial_org(seg.depth, gran_bytes,
+                                         mean_pes, hw)
+    if any(not gr.pipelinable for gr in grans):
+        via_gb = True  # fall back to staging through the global buffer
+
+    placement = place(org, [float(p) for p in pe_alloc], hw, via_gb)
+
+    # Blocked organizations keep flexible intra-op dataflows, so a produced
+    # word is needed by many consumer PEs -> multicast chains (Figs. 8-9).
+    # Fine interleavings constrain the consumer to its neighbour's output
+    # -> unicast (Fig. 10).
+    fine = org in (SpatialOrg.FINE_STRIPED_1D, SpatialOrg.CHECKERBOARD_2D)
+    flow_fn = pair_flows if fine else multicast_flows
+
+    # Per-pair traffic analysis at burst granularity: every interval each
+    # producer PE emits one word (lockstep), so pair j's burst volume is its
+    # producer's PE count.  Skip connections whose span covers the boundary
+    # ride the same links at the pair's burst rate (Figs. 9a / 11).
+    n_bursts = [max(1, math.ceil(ops[j].output_volume()
+                                 / max(1, pe_alloc[j])))
+                for j in range(len(grans))]
+    per_pair_stats = []
+    for j in range(len(grans)):
+        flows = flow_fn(placement, j, j + 1,
+                        float(pe_alloc[j]) * traffic_scale)
+        for s, t, vol in intra_skips:
+            if s <= j < t:
+                flows.extend(flow_fn(placement, s, t,
+                                     vol / max(1, n_bursts[j])))
+        per_pair_stats.append(analyze(flows, hw, topology))
+    worst = max(per_pair_stats, key=lambda st: st.worst_channel_load)
+
+    cost = segment_cost(ops, dfs, grans, pe_alloc, hw, per_pair_stats,
+                        via_gb, ext_in, ext_out, skip_in, array_pes=usable)
+    return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc, org,
+                       placement, worst, cost)
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+
+def plan_pipeorgan(g: Graph, hw: HWConfig,
+                   topology: Topology = Topology.AMP) -> PlanResult:
+    """Full PipeOrgan flow (Fig. 7).
+
+    Stage 1's footprint heuristic gives the *maximum useful* depth per
+    segment; stage 2 then evaluates candidate depths below it (deeper
+    pipelines shrink per-layer tile budgets — Sec. III-A — so the mapper
+    keeps the heuristic depth only when the evaluated cost agrees) and
+    keeps the cheapest sub-segmentation.
+    """
+    segs = segment_graph(g, hw)
+    df_fn = lambda op, hw_, i, budget: choose_dataflow(op, hw_, budget)
+    plans: List[SegmentPlan] = []
+    for s in segs:
+        candidates: List[Tuple[float, float, List[SegmentPlan]]] = []
+        for d in sorted({1, 2, 4, 8, s.depth}, reverse=True):
+            if d > s.depth:
+                continue
+            subplans = []
+            i = s.start
+            while i < s.stop:
+                ss = Segment(i, min(i + d, s.stop))
+                subplans.append(_plan_segment(g, ss, hw, topology, df_fn,
+                                              None, None))
+                i = ss.stop
+            lat = sum(p.cost.latency_cycles for p in subplans)
+            dram = sum(p.cost.dram_bytes for p in subplans)
+            candidates.append((lat, dram, subplans))
+        # objective: latency first; among candidates within 25% of the best
+        # latency, prefer the lowest DRAM traffic (the paper optimizes both
+        # performance and energy — Fig. 13 / Fig. 14)
+        best_lat = min(c[0] for c in candidates)
+        viable = [c for c in candidates if c[0] <= 1.25 * best_lat]
+        _, _, best = min(viable, key=lambda c: (c[1], c[0]))
+        plans.extend(best)
+    return PlanResult(g.name, "pipeorgan", topology, plans)
+
+
+def plan_tangram_like(g: Graph, hw: HWConfig,
+                      topology: Topology = Topology.MESH) -> PlanResult:
+    """Fixed depth=2, alternating output/input stationary, blocked 1D."""
+    segs = []
+    i = 0
+    while i < len(g.ops):
+        d = 2 if i + 1 < len(g.ops) else 1
+        # don't pair across a complex layer and require a direct edge
+        if d == 2:
+            nxt = g.ops[i + 1]
+            from .graph import COMPLEX_KINDS
+            direct = any(g.index(s) == i for s in nxt.inputs)
+            if (nxt.kind in COMPLEX_KINDS or g.ops[i].kind in COMPLEX_KINDS
+                    or not direct):
+                d = 1
+        segs.append(Segment(i, i + d))
+        i += d
+
+    def df_fn(op: Op, hw_: HWConfig, slot: int, budget: int) -> Dataflow:
+        base = choose_dataflow(op, hw_, budget)
+        if op.kind == OpKind.CONV:
+            order = (("N", "H", "W", "K", "C", "R", "S") if slot == 0
+                     else ("N", "H", "W", "C", "K", "R", "S"))
+            return dataclasses.replace(base, loop_order=order,
+                                       stationary="output" if slot == 0
+                                       else "input")
+        if op.kind == OpKind.GEMM:
+            order = ("M", "N", "K") if slot == 0 else ("M", "K", "N")
+            return dataclasses.replace(base, loop_order=order)
+        return base
+
+    # Alternating output-/input-stationary pipelining moves the forwarded
+    # activation AND the consumer's spatially-spread partial sums through
+    # the NoC (the reason the paper's TANGRAM congests at 1-cycle
+    # intervals on KD-resnet) -> 2x burst traffic per interval.
+    plans = [_plan_segment(g, s, hw, topology, df_fn,
+                           SpatialOrg.BLOCKED_1D, False,
+                           traffic_scale=2.0) for s in segs]
+    return PlanResult(g.name, "tangram-like", topology, plans)
+
+
+def plan_simba_like(g: Graph, hw: HWConfig,
+                    topology: Topology = Topology.MESH) -> PlanResult:
+    """Parallelize C,K; pipeline only on substrate under-utilization."""
+    segs: List[Segment] = []
+    i = 0
+    while i < len(g.ops):
+        op = g.ops[i]
+        ck = op.dims.get("C", 1) * op.dims.get("K", op.dims.get("C", 1))
+        underutilized = ck < hw.num_pes
+        d = 1
+        if underutilized and i + 1 < len(g.ops):
+            nxt = g.ops[i + 1]
+            from .graph import COMPLEX_KINDS
+            direct = any(g.index(s) == i for s in nxt.inputs)
+            if nxt.kind not in COMPLEX_KINDS and direct:
+                d = 2
+        segs.append(Segment(i, i + d))
+        i += d
+
+    def df_fn(op: Op, hw_: HWConfig, slot: int, budget: int) -> Dataflow:
+        base = choose_dataflow(op, hw_, budget)
+        if op.kind == OpKind.CONV:
+            # C/K parallel => output stationary spatial over channels
+            return dataclasses.replace(
+                base, loop_order=("N", "H", "W", "K", "C", "R", "S"))
+        return base
+
+    def util_fn(op: Op, hw_: HWConfig) -> float:
+        # SIMBA-like spreads only input/output channels spatially
+        d = op.dims
+        if op.kind == OpKind.CONV:
+            par = d["C"] * d["K"]
+        elif op.kind == OpKind.DWCONV:
+            par = d["C"]
+        elif op.kind == OpKind.GEMM:
+            par = d["N"] * min(d["K"], 64)
+        else:
+            par = op.output_volume()
+        return min(1.0, par / hw_.num_pes)
+
+    plans = [_plan_segment(g, s, hw, topology, df_fn,
+                           SpatialOrg.BLOCKED_1D, False, util_fn=util_fn)
+             for s in segs]
+    return PlanResult(g.name, "simba-like", topology, plans)
+
+
+def plan_layer_by_layer(g: Graph, hw: HWConfig) -> PlanResult:
+    segs = [Segment(i, i + 1) for i in range(len(g.ops))]
+    df_fn = lambda op, hw_, i, budget: choose_dataflow(op, hw_, budget)
+    plans = [_plan_segment(g, s, hw, Topology.MESH, df_fn, None, None)
+             for s in segs]
+    return PlanResult(g.name, "layer-by-layer", Topology.MESH, plans)
+
+
+STRATEGIES = {
+    "pipeorgan": plan_pipeorgan,
+    "tangram": plan_tangram_like,
+    "simba": plan_simba_like,
+    "layerbylayer": plan_layer_by_layer,
+}

@@ -1,0 +1,185 @@
+"""Stage-2: spatial organization strategies — Sec. IV-B and Fig. 2.
+
+A spatial organization assigns every PE of the array to one layer of the
+pipeline segment.  The paper's class of strategies:
+
+  * BLOCKED_1D      — contiguous row-bands per layer (prior work default)
+  * BLOCKED_2D      — contiguous rectangular quadrants (depth >= 4)
+  * FINE_STRIPED_1D — row-interleaved stripes (producer/consumer co-located)
+  * CHECKERBOARD_2D — PE-granular 2-D interleaving (finest)
+
+Selection rule (Sec. IV-B):
+  if RF_total(producer) < granularity: move through the Global Buffer,
+  always BLOCKED.  Otherwise the finer the granularity relative to the
+  per-PE RF, the finer the interleaving; 1-D vs 2-D by segment depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .hwconfig import HWConfig
+
+
+class SpatialOrg(enum.Enum):
+    BLOCKED_1D = "blocked_1d"
+    BLOCKED_2D = "blocked_2d"
+    FINE_STRIPED_1D = "fine_striped_1d"
+    CHECKERBOARD_2D = "checkerboard_2d"
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """grid[r, c] = layer slot (0..depth-1) owning PE (r, c)."""
+    org: SpatialOrg
+    grid: np.ndarray          # int32 [rows, cols]
+    via_global_buffer: bool   # coarse pipelining moves data through the GB
+
+    @property
+    def depth(self) -> int:
+        return int(self.grid.max()) + 1
+
+    def pes_of(self, slot: int) -> np.ndarray:
+        """[(row, col)] coordinates owned by a layer slot."""
+        return np.argwhere(self.grid == slot)
+
+
+def allocate_pes(mac_ratios: Sequence[float], num_units: int) -> List[int]:
+    """Split ``num_units`` PEs across layers proportional to MACs.
+
+    Largest-remainder apportionment; every layer gets >= 1 unit.
+    """
+    n = len(mac_ratios)
+    if n > num_units:
+        raise ValueError(f"more layers ({n}) than PEs ({num_units})")
+    total = float(sum(mac_ratios)) or 1.0
+    raw = [r / total * num_units for r in mac_ratios]
+    alloc = [max(1, int(x)) for x in raw]
+    # fix the sum: shave the biggest overshoot (only decrementable slots),
+    # then top up the biggest remainders
+    while sum(alloc) > num_units:
+        cands = [j for j in range(n) if alloc[j] > 1]
+        i = max(cands, key=lambda j: (alloc[j] - raw[j], alloc[j]))
+        alloc[i] -= 1
+    order = sorted(range(n), key=lambda i: raw[i] - alloc[i], reverse=True)
+    k = 0
+    while sum(alloc) < num_units:
+        alloc[order[k % n]] += 1
+        k += 1
+    return alloc
+
+
+def _units_to_rows(alloc_pes: Sequence[int], rows: int, cols: int) -> List[int]:
+    """Convert PE counts to whole-row counts (for 1-D organizations)."""
+    n = len(alloc_pes)
+    raw = [a / cols for a in alloc_pes]
+    r = [max(1, round(x)) for x in raw]
+    while sum(r) > rows:
+        cands = [j for j in range(n) if r[j] > 1]
+        if not cands:
+            raise ValueError("depth exceeds row count")
+        i = max(cands, key=lambda j: (r[j] - raw[j], r[j]))
+        r[i] -= 1
+    while sum(r) < rows:
+        i = min(range(n), key=lambda j: (r[j] - raw[j], -raw[j]))
+        r[i] += 1
+    return r
+
+
+def place(org: SpatialOrg, mac_ratios: Sequence[float], hw: HWConfig,
+          via_global_buffer: bool = False) -> Placement:
+    rows, cols = hw.pe_rows, hw.pe_cols
+    depth = len(mac_ratios)
+    grid = np.zeros((rows, cols), dtype=np.int32)
+
+    if org == SpatialOrg.BLOCKED_1D:
+        r_alloc = _units_to_rows(allocate_pes(mac_ratios, rows * cols),
+                                 rows, cols)
+        r0 = 0
+        for slot, nr in enumerate(r_alloc):
+            grid[r0:r0 + nr, :] = slot
+            r0 += nr
+
+    elif org == SpatialOrg.FINE_STRIPED_1D:
+        r_alloc = _units_to_rows(allocate_pes(mac_ratios, rows * cols),
+                                 rows, cols)
+        # interleave rows round-robin in proportion: build the smallest
+        # repeating pattern then tile it down the array.
+        g = math.gcd(*r_alloc) if depth > 1 else r_alloc[0]
+        pattern: List[int] = []
+        unit = [a // g for a in r_alloc]
+        for _ in range(g):
+            for slot, u in enumerate(unit):
+                pattern.extend([slot] * u)
+        for r in range(rows):
+            grid[r, :] = pattern[r % len(pattern)]
+
+    elif org == SpatialOrg.BLOCKED_2D:
+        # rectangular tiling: split rows into bands of ~sqrt(depth) and
+        # columns within each band, snake-ordered so consecutive slots abut.
+        brows = max(1, int(math.isqrt(depth)))
+        bcols = math.ceil(depth / brows)
+        rb = rows // brows
+        cb = cols // bcols
+        slot = 0
+        for b in range(brows):
+            cols_iter = range(bcols) if b % 2 == 0 else range(bcols - 1, -1, -1)
+            for c in cols_iter:
+                if slot >= depth:
+                    break
+                r_end = rows if b == brows - 1 else (b + 1) * rb
+                c_end = cols if c == bcols - 1 else (c + 1) * cb
+                grid[b * rb:r_end, c * cb:c_end] = slot
+                slot += 1
+        # any PEs left at default 0 in incomplete tiling are fine (slot 0)
+
+    elif org == SpatialOrg.CHECKERBOARD_2D:
+        # PE-granular 2-D interleave: slot = (r + c) mod depth scaled by
+        # MAC ratios via repetition counts.
+        alloc = allocate_pes(mac_ratios, rows * cols)
+        # lay slots down a space-filling (boustrophedon) order so equal-count
+        # slots form a checkerboard-like interleave.
+        seq: List[int] = []
+        counts = list(alloc)
+        while any(c > 0 for c in counts):
+            for slot in range(depth):
+                if counts[slot] > 0:
+                    seq.append(slot)
+                    counts[slot] -= 1
+        k = 0
+        for r in range(rows):
+            cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
+            for c in cs:
+                grid[r, c] = seq[k]
+                k += 1
+    else:
+        raise ValueError(org)
+
+    return Placement(org, grid, via_global_buffer)
+
+
+def choose_spatial_org(depth: int, granularity_bytes: int,
+                       producer_pes: int, hw: HWConfig
+                       ) -> Tuple[SpatialOrg, bool]:
+    """Sec. IV-B selection rule -> (organization, via_global_buffer)."""
+    if depth <= 1:
+        return SpatialOrg.BLOCKED_1D, True
+    rf_total = producer_pes * hw.rf_bytes_per_pe
+    if rf_total < granularity_bytes:
+        # coarse pipelining through the global buffer: always blocked
+        org = SpatialOrg.BLOCKED_2D if depth >= 4 else SpatialOrg.BLOCKED_1D
+        return org, True
+    # fine-grained: how fine is the granularity relative to a PE's RF?
+    pes_per_interval = max(1, granularity_bytes // hw.rf_bytes_per_pe)
+    frac = pes_per_interval / max(1, producer_pes)
+    if frac >= 0.5:
+        # granularity ~ the producer's whole RF: blocked is fine
+        org = SpatialOrg.BLOCKED_2D if depth >= 4 else SpatialOrg.BLOCKED_1D
+        return org, False
+    if depth >= 4:
+        return SpatialOrg.CHECKERBOARD_2D, False
+    return SpatialOrg.FINE_STRIPED_1D, False

@@ -1,0 +1,176 @@
+"""Pipeline-parallel stage placement — PipeOrgan's spatial organization
+at the pod level.
+
+The paper's chip-level insight (place the consumer next to the producer;
+choose blocked vs interleaved organization by pipelining granularity) maps
+onto the ICI mesh: pipeline stages are laid out along the "model" axis of
+the (data, model) mesh, and the *device order* of the stages determines
+how many ICI hops every stage->stage activation transfer crosses.
+
+  * BLOCKED  — stage s owns a contiguous device block.  Within-stage
+    collectives (TP) stay local, but with multiple devices per stage the
+    stage boundary transfer crosses the block (the pod analogue of the
+    paper's blocked organization), and microbatch k's transfer contends
+    with k+1's on the same links.
+  * STRIPED  — stages interleave round-robin, so the producer shard of
+    stage s and the consumer shard of stage s+1 are ICI *neighbours*
+    (1 hop), at the cost of spreading each stage's TP collectives across
+    the array — exactly the paper's locality/flexibility trade-off.
+
+``placement_cost`` scores both against link bandwidth (AMP's analogue is
+the wrap-around torus link, which rescues BLOCKED's last->first loop
+transfer); ``choose_placement`` is the Sec. IV-B rule at pod scale.
+``pipeline_spmd_fn`` builds a shard_map program whose stage handoff is a
+``lax.ppermute`` with the chosen permutation — compiled by the dry-run on
+the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hwconfig import ICI_BW_PER_LINK
+
+
+class StageOrg(enum.Enum):
+    BLOCKED = "blocked"
+    STRIPED = "striped"
+
+
+def stage_of_device(org: StageOrg, n_stages: int, n_devices: int
+                    ) -> List[int]:
+    """stage id owning each position along the model axis."""
+    dps = n_devices // n_stages
+    if org == StageOrg.BLOCKED:
+        return [min(i // dps, n_stages - 1) for i in range(n_devices)]
+    return [i % n_stages for i in range(n_devices)]
+
+
+def handoff_permutation(org: StageOrg, n_stages: int, n_devices: int
+                        ) -> List[Tuple[int, int]]:
+    """(src, dst) pairs moving stage s's shard i to stage s+1's shard i.
+
+    The last stage wraps to the first (next microbatch enters as the
+    previous leaves — steady-state pipelining).
+    """
+    dps = n_devices // n_stages
+    # STRIPED: stage of device d is d % n_stages, so "next stage, same
+    # shard" is simply the ring neighbour d+1 — every handoff (wrap
+    # included) is ONE ICI hop, the paper's fine interleaving.
+    # BLOCKED: shard i of stage s sits at s*dps+i, so the handoff jumps a
+    # whole block (dps hops), and the wrap crosses the array.
+    shift = 1 if org == StageOrg.STRIPED else dps
+    return [(d, (d + shift) % n_devices) for d in range(n_devices)]
+
+
+def hop_distance(src: int, dst: int, n_devices: int, torus: bool) -> int:
+    d = abs(dst - src)
+    return min(d, n_devices - d) if torus else d
+
+
+def placement_cost(org: StageOrg, n_stages: int, n_devices: int,
+                   bytes_per_handoff: float, torus: bool = True) -> dict:
+    """ICI cost of one pipeline round: hops, worst-link contention, time.
+
+    Mirrors the core NoC model (repro.core.noc) at pod granularity: every
+    handoff's bytes traverse hop-many links of a 1-D slice of the mesh;
+    overlapping paths contend.
+    """
+    perm = handoff_permutation(org, n_stages, n_devices)
+    link_load = np.zeros(n_devices)      # link i: device i -> i+1 (ring)
+    total_hop_bytes = 0.0
+    max_hops = 0
+    per_dev = bytes_per_handoff / max(1, n_devices // n_stages)
+    for src, dst in perm:
+        d = hop_distance(src, dst, n_devices, torus)
+        max_hops = max(max_hops, d)
+        total_hop_bytes += per_dev * d
+        step = 1 if ((dst - src) % n_devices) <= n_devices // 2 else -1
+        if not torus:
+            step = 1 if dst > src else -1
+        i = src
+        while i != dst:
+            link = i if step == 1 else (i - 1) % n_devices
+            link_load[link] += per_dev
+            i = (i + step) % n_devices
+    worst = float(link_load.max()) if len(perm) else 0.0
+    return {
+        "org": org.value,
+        "max_hops": max_hops,
+        "total_hop_bytes": total_hop_bytes,
+        "worst_link_bytes": worst,
+        "handoff_seconds": worst / ICI_BW_PER_LINK,
+    }
+
+
+def choose_placement(n_stages: int, n_devices: int,
+                     bytes_per_handoff: float,
+                     tp_bytes_per_stage: float,
+                     torus: bool = True) -> StageOrg:
+    """Sec. IV-B at pod scale: fine interleaving wins when the inter-stage
+    (pipelining) traffic dominates the intra-stage (TP) traffic; blocked
+    wins when TP collectives dominate (they'd pay striped's scattered
+    rings)."""
+    if tp_bytes_per_stage > bytes_per_handoff:
+        return StageOrg.BLOCKED
+    blocked = placement_cost(StageOrg.BLOCKED, n_stages, n_devices,
+                             bytes_per_handoff, torus)
+    striped = placement_cost(StageOrg.STRIPED, n_stages, n_devices,
+                             bytes_per_handoff, torus)
+    return (StageOrg.STRIPED
+            if striped["worst_link_bytes"] < blocked["worst_link_bytes"]
+            else StageOrg.BLOCKED)
+
+
+# ---------------------------------------------------------------------------
+# shard_map pipeline program (compiled by the dry-run)
+# ---------------------------------------------------------------------------
+
+def pipeline_spmd_fn(stage_fn: Callable, org: StageOrg, n_stages: int,
+                     mesh, n_microbatches: int) -> Callable:
+    """Build an SPMD GPipe-style forward pipeline over the "model" axis.
+
+    Every device runs ``stage_fn(stage_params, x)`` for its stage and
+    hands the activation to the next stage's device with a single
+    ``lax.ppermute`` whose permutation encodes the PipeOrgan placement.
+    Microbatches stream in so all stages are busy in steady state.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_dev = mesh.shape["model"]
+    perm = handoff_permutation(org, n_stages, n_dev)
+    stages = jnp.asarray(stage_of_device(org, n_stages, n_dev), jnp.int32)
+
+    def spmd(params_stacked, xs):
+        # params_stacked: (n_stages, ...) pytree; xs: (n_microbatches, B, D)
+        idx = jax.lax.axis_index("model")
+        my_stage = stages[idx]
+        my_params = jax.tree.map(lambda a: a[my_stage], params_stacked)
+
+        def step(carry, x_in):
+            # each device: run its stage on whatever sits in its buffer,
+            # then pass the result along the pipeline permutation
+            buf = carry
+            y = stage_fn(my_params, buf)
+            y = jax.lax.ppermute(y, "model", perm)
+            # stage 0 devices ingest the next microbatch instead
+            y = jnp.where(my_stage == 0, x_in, y)
+            return y, y
+
+        init = jnp.zeros_like(xs[0])
+        _, outs = jax.lax.scan(step, init, xs)
+        return outs
+
+    return shard_map(
+        spmd, mesh=mesh,
+        in_specs=(P(), P(None, ("pod", "data") if "pod" in mesh.axis_names
+                        else "data", None)),
+        out_specs=P(None, ("pod", "data") if "pod" in mesh.axis_names
+                    else "data", None),
+        check_rep=False)

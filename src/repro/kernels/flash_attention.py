@@ -1,0 +1,101 @@
+"""Flash attention (causal + sliding window), TPU Pallas.
+
+Online-softmax tiling: grid (B*H, nq, nk) with the kv axis innermost, so
+the fp32 accumulator / running max / running sum scratch tiles persist in
+VMEM across the kv sweep.  This is the activation-heavy producer/consumer
+chain (QK^T -> softmax -> PV) fused at tile granularity — the planner
+marks attention for fusion exactly like the paper's activation-stationary
+segments.
+
+The window mask covers gemma3-style local attention; window >= S is
+global.  GQA is handled by the ops.py wrapper (kv heads are expanded
+index-wise in the BlockSpec, never materialized).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, causal: bool, window: int,
+                  n_k: int, sm_scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jnp.dot(q, k.T) * sm_scale                    # (bq, bk)
+
+    qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kj = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, hd); k/v: (BH, T, hd).  window<=0 means unbounded."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    grid = (BH, S // bq, T // bk)
+    sm_scale = hd ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=bq, block_k=bk,
+                          causal=causal, window=window, n_k=grid[2],
+                          sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qb, kb: (b, qb, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qb, kb: (b, kb, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qb, kb: (b, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qb, kb: (b, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch persisting across the kv sweep
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""Dispatching wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+``use_pallas`` can be forced (e.g. interpret-mode validation in tests);
+by default kernels run only on TPU backends, keeping CPU smoke tests on
+the exact reference path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .fused_mlp import fused_mlp
+from .rglru_scan import rglru_chunked
+from .rwkv6_scan import wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mlp_block(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, use_pallas: Optional[bool] = None,
+              interpret: bool = False) -> jax.Array:
+    """(B,S,D) SwiGLU with VMEM-fused intermediate on TPU."""
+    B, S, D = x.shape
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.fused_mlp_ref(x.reshape(B * S, D), w_gate, w_up,
+                                 w_down).reshape(B, S, D)
+    y = fused_mlp(x.reshape(B * S, D), w_gate, w_up, w_down,
+                  interpret=interpret)
+    return y.reshape(B, S, D)
+
+
+def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool = True, window: int = 0,
+                 use_pallas: Optional[bool] = None,
+                 interpret: bool = False) -> jax.Array:
+    """(BH, S, hd) attention; flash kernel on TPU, exact ref elsewhere."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)
+
+
+def wkv6_op(r, k, v, w, u, use_pallas: Optional[bool] = None,
+            chunk: int = 64, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.wkv6_ref(r, k, v, w, u)
+    return wkv6(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+def rglru_op(a, b, use_pallas: Optional[bool] = None, chunk: int = 64,
+             interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.rglru_ref(a, b)
+    return rglru_chunked(a, b, chunk=chunk, interpret=interpret)

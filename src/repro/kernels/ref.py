@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every kernel — the ground truth the Pallas kernels
+are swept against (tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array) -> jax.Array:
+    g = jnp.dot(x.astype(jnp.float32), w_gate.astype(jnp.float32))
+    u = jnp.dot(x.astype(jnp.float32), w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    return jnp.dot(h.astype(x.dtype).astype(jnp.float32),
+                   w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (BH, S, hd); k/v: (BH, T, hd)."""
+    S, T = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= (i - j) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential WKV6.  r,k,v,w: (BH,T,N); u: (BH,1,N)."""
+    BH, T, N = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)[:, 0, :]                   # (BH, N)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                             # (BH, N)
+        kv = kt[:, :, None] * vt[:, None, :]             # (BH, N, N)
+        y = jnp.einsum("bi,bij->bj", rt, s + u[:, :, None] * kv)
+        s = wt[:, :, None] * s + kv
+        return s, y
+
+    s0 = jnp.zeros((BH, N, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_last
+
+
+def rglru_ref(a, b):
+    """Sequential diagonal recurrence h_t = a_t h_{t-1} + b_t.
+    a, b: (B, T, W) -> (h (B,T,W), h_last (B,1,W))."""
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    xs = (jnp.moveaxis(a32, 1, 0), jnp.moveaxis(b32, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_last[:, None, :]

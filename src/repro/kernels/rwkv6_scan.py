@@ -1,0 +1,109 @@
+"""Chunked-parallel WKV6 recurrence, TPU Pallas.
+
+The RWKV6 state update S_t = diag(w_t) S_{t-1} + k_t^T v_t is a linear
+chain — the deepest "pipeline segment" the planner sees (depth = T).  The
+chunked form processes L timesteps per grid step: the (L, L, N) intra-chunk
+decay tensor lives entirely in VMEM (L=64, N=64 -> 1 MiB fp32), and the
+(N, N) state carries across the chunk sweep in VMEM scratch — the
+inter-chunk granularity is one state matrix, never written to HBM until
+the final chunk.
+
+y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+Intra-chunk (0-indexed within chunk, c = cumulative log decay):
+  y_t = r_t diag(exp(c_{t-1})) S_in
+      + sum_{tau<t} [sum_i r_t[i] k_tau[i] exp(c_{t-1,i} - c_{tau,i})] v_tau
+      + (r_t . u . k_t) v_t
+  S_out = diag(exp(c_{L-1})) S_in + sum_tau diag(exp(c_{L-1} - c_tau)) k_tau^T v_tau
+
+exp arguments are always <= 0 (c is non-increasing), so the chunked form
+is numerically safe at any decay rate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref,
+                 s_ref, *, chunk: int, n_chunks: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # (L, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)        # decays in (0,1)
+    u = u_ref[0].astype(jnp.float32)        # (1, N) bonus
+    s = s_ref[...]                          # (N, N) carry
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    c = jnp.cumsum(logw, axis=0)            # (L, N): c_t = sum_{s<=t} log w_s
+    c_prev = c - logw                       # c_{t-1} (c_{-1} = 0)
+
+    # carry contribution: r_t . exp(c_{t-1}) applied to S_in
+    y = jnp.dot(r * jnp.exp(c_prev), s)     # (L, N)
+
+    # intra-chunk: scores[t, tau] = sum_i r[t,i] k[tau,i] e^{c_prev[t,i]-c[tau,i]}
+    decay = jnp.exp(c_prev[:, None, :] - c[None, :, :])   # (L, L, N), <=1 for tau<t
+    scores = jnp.einsum("ti,si,tsi->ts", r, k, decay)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(s_ids < t_ids, scores, 0.0)        # strictly past
+    y += jnp.dot(scores, v)
+
+    # current-token bonus
+    y += jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update for the next chunk
+    c_last = c[-1:]                                        # (1, N)
+    decay_out = jnp.exp(c_last - c)                        # (L, N), <=1
+    s_new = jnp.exp(c_last).T * s + jnp.dot((k * decay_out).T, v)
+    s_ref[...] = s_new
+
+    @pl.when(cb == n_chunks - 1)
+    def _finish():
+        s_out_ref[0] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (BH, T, N); u: (BH, 1, N) -> (y (BH,T,N), S (BH,N,N))."""
+    BH, T, N = r.shape
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    grid = (BH, T // L)
+
+    y, s_out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=L, n_chunks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, N, N), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, N), jnp.float32),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, s_out

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (jax locks the device count on first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests/smoke): (1, N) data x model."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

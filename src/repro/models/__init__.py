@@ -1,0 +1,13 @@
+"""Model zoo: pure-pytree JAX models for the 10 assigned architectures."""
+from .common import ModelConfig, Params, SHAPES, ShapeSpec, cross_entropy_loss
+from .transformer import (decode_step, encode_frames, forward, init_cache,
+                          init_model, layer_windows, loss_fn,
+                          whisper_decode_step, whisper_forward,
+                          whisper_loss_fn)
+
+__all__ = [
+    "ModelConfig", "Params", "SHAPES", "ShapeSpec", "cross_entropy_loss",
+    "decode_step", "encode_frames", "forward", "init_cache", "init_model",
+    "layer_windows", "loss_fn", "whisper_decode_step", "whisper_forward",
+    "whisper_loss_fn",
+]

@@ -1,0 +1,190 @@
+"""Shared model machinery: config, norms, RoPE (incl. M-RoPE), init.
+
+Models are pure pytrees of jnp arrays + pure apply functions (no flax).
+Per-layer parameters are stacked along a leading axis so the transformer
+can `lax.scan` over layers with rematerialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_kind: str                   # dense | moe | hybrid | rwkv | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # local/global attention pattern (gemma3): window>0 => sliding window;
+    # every `global_every`-th layer is global (window = -1)
+    local_window: int = 0
+    global_every: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # hybrid (recurrentgemma): pattern unit, e.g. ("rglru","rglru","attn")
+    block_pattern: Tuple[str, ...] = ()
+    rglru_dim: int = 0               # recurrence width (lru_width)
+    conv1d_width: int = 4
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+    # vlm
+    n_patches: int = 256
+    mrope_sections: Tuple[int, int, int] = (0, 0, 0)
+    # numerics
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    # beyond-paper: int8 KV cache (per-vector scales) halves the decode
+    # roofline's dominant term (HBM cache reads)
+    kv_quant: bool = False
+    # execute hot ops through the Pallas kernels (TPU; interpret on CPU)
+    use_kernels: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a TP-shardable multiple (256)."""
+        return -(-self.vocab // 256) * 256
+
+    def n_params(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        hd = self.hd
+        attn = self.d_model * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * self.d_model
+        if self.n_experts:
+            mlp = 3 * self.d_model * self.d_ff * self.n_experts
+        else:
+            mlp = 3 * self.d_model * self.d_ff
+        per_layer = attn + mlp
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+    def n_active_params(self) -> int:
+        if not self.n_experts:
+            return self.n_params()
+        hd = self.hd
+        attn = self.d_model * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * self.d_model
+        mlp = 3 * self.d_model * self.d_ff * self.top_k
+        emb = self.vocab * self.d_model * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + mlp) + emb
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (input shape) cell of the assignment."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                      # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (..., S, 3) — (temporal, height, width) position ids.
+    sections: how many rotary frequency PAIRS go to each of (t, h, w);
+    must sum to hd//2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    # pick the position stream per frequency-pair section
+    sec_ids = jnp.concatenate([
+        jnp.full((sections[0],), 0), jnp.full((sections[1],), 1),
+        jnp.full((sections[2],), 2)]).astype(jnp.int32)  # (hd/2,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids, positions.shape[:-1] + (hd // 2,)),
+        axis=-1)                                        # (..., S, hd/2)
+    angles = (pos * freqs)[..., None, :]                # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[0]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with optional z-loss, fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

@@ -1,0 +1,360 @@
+"""Attention (GQA / RoPE / M-RoPE / sliding window / KV cache), MLPs, MoE.
+
+All layers are einsum-based so GSPMD can shard them; activations follow
+(batch, seq, ...) layout.  Decode paths take a KV cache and a scalar
+``cache_index`` and update in place with dynamic_update_slice.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import hint, hint_any
+
+from .common import (ModelConfig, Params, apply_mrope, apply_rope, dense_init,
+                     rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, cfg: ModelConfig,
+                   d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), cfg.dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), cfg.dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), cfg.dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.dtype)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ModelConfig
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = hint(q, "batch", None, "model")
+    k = hint(k, "batch", None, "model")
+    v = hint(v, "batch", None, "model")
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+          cfg: ModelConfig) -> jax.Array:
+    """(B,S,H,hd) x (B,T,Hkv,hd) -> (B,S,H,hd); GQA via head grouping."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    G = H // k.shape[2]
+    q = q.reshape(B, S, k.shape[2], G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    # prefer head (TP) sharding; GQA archs whose kv*G doesn't divide the
+    # model axis fall back to key-sequence sharding (attention SP)
+    scores = hint_any(scores.reshape(B, -1, S, T),
+                      [("batch", "model", None, None),
+                       ("batch", None, None, "model")]).reshape(scores.shape)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                  cfg: ModelConfig, window: int, chunk: int = 512
+                  ) -> jax.Array:
+    """Flash-style chunked causal attention (no S x T materialization).
+
+    The jnp counterpart of kernels/flash_attention.py: iterate query chunks
+    sequentially; local-window layers slice only the (window + chunk) keys
+    they can see, so an S=32k local layer touches 2k keys per chunk, never
+    the full sequence — PipeOrgan's granularity argument applied to the
+    attention producer/consumer pair.  window <= 0 means unbounded.
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    while chunk > 64 and S % chunk != 0:   # e.g. VLM seq = text + patches
+        chunk //= 2
+    if S % chunk != 0:
+        chunk = next((c for c in range(min(chunk, S), 0, -1)
+                      if S % c == 0), S)
+    w_eff = window if window and 0 < window < T else T
+    ksz = min(T, w_eff + chunk)                      # static slice size
+    nq = S // chunk
+
+    def one(ci):
+        q0 = ci * chunk
+        qc = jax.lax.dynamic_slice(q, (0, q0, 0, 0), (B, chunk, H, hd))
+        k0 = jnp.clip(q0 + chunk - ksz, 0, T - ksz)
+        kc = jax.lax.dynamic_slice(k, (0, k0, 0, 0), (B, ksz, Hkv, hd))
+        vc = jax.lax.dynamic_slice(v, (0, k0, 0, 0), (B, ksz, Hkv, hd))
+        qpos = q0 + jnp.arange(chunk)[:, None]
+        kpos = k0 + jnp.arange(ksz)[None, :]
+        mask = (kpos <= qpos) & (qpos - kpos < w_eff)
+        qg = qc.reshape(B, chunk, Hkv, G, hd)
+        sc = jnp.einsum("bskgh,btkh->bkgst", qg, kc).astype(jnp.float32)
+        sc = hint_any(sc.reshape(B, Hkv * G, chunk, ksz),
+                      [("batch", "model", None, None),
+                       ("batch", None, None, "model")]).reshape(sc.shape)
+        sc = sc / jnp.sqrt(hd).astype(jnp.float32)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+        oc = jnp.einsum("bkgst,btkh->bskgh", w, vc)
+        return oc.reshape(B, chunk, H, hd)
+
+    outs = jax.lax.map(one, jnp.arange(nq))          # (nq, B, chunk, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+#: sequence length above which the no-cache path switches to chunked
+#: attention (keeps the transient scores buffer ~chunk x window)
+CHUNKED_ATTN_THRESHOLD = 8192
+
+
+def attention(p: Params, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array,
+              window: Optional[jax.Array] = None,
+              causal: bool = True,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              mrope_positions: Optional[jax.Array] = None,
+              rope: bool = True,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Self-attention; returns (output, updated cache).
+
+    window: traced scalar; attend only to keys within `window` positions
+    (<=0 or None means unbounded).  cache: (k, v) of shape
+    (B, T_max, Hkv, hd); cache_index: first free slot (scalar int32).
+    """
+    B, S, _ = x.shape
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (B, S))
+    q, k, v = _qkv(p, x, cfg)
+    if rope:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta,
+                            cfg.mrope_sections)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta,
+                            cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        if cfg.kv_quant:
+            # int8 cache with per-vector scales: quantize the new slice,
+            # dequantize on read (fused on TPU; HBM moves 1B/elem not 2)
+            ck, cv, ks, vs = cache
+            k_s = jnp.max(jnp.abs(k), axis=-1, keepdims=True) / 127.0 + 1e-8
+            v_s = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-8
+            k_q = jnp.round(k / k_s).astype(jnp.int8)
+            v_q = jnp.round(v / v_s).astype(jnp.int8)
+            idx = (0, cache_index, 0, 0)
+            ck = jax.lax.dynamic_update_slice(ck, k_q, idx)
+            cv = jax.lax.dynamic_update_slice(cv, v_q, idx)
+            ks = jax.lax.dynamic_update_slice(ks, k_s.astype(ks.dtype), idx)
+            vs = jax.lax.dynamic_update_slice(vs, v_s.astype(vs.dtype), idx)
+            k = ck.astype(x.dtype) * ks.astype(x.dtype)
+            v = cv.astype(x.dtype) * vs.astype(x.dtype)
+            new_cache = (ck, cv, ks, vs)
+        else:
+            ck, cv = cache
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, cache_index, 0, 0))
+            k, v = ck, cv
+            new_cache = (ck, cv)
+        T = k.shape[1]
+        kpos = jnp.arange(T)[None, None, :]                # (1,1,T)
+        qpos = positions[:, :, None]                       # (B,S,1)
+        mask = kpos <= qpos                                # causal vs cache
+        mask = mask & (kpos < (cache_index + S))
+        if window is not None:
+            mask = mask & (qpos - kpos < window)
+    else:
+        new_cache = None
+        T = S
+        static_window = int(window) if isinstance(window, int) else (
+            int(window) if window is not None
+            and not hasattr(window, "aval") else None)
+        use_chunked = (causal and S >= CHUNKED_ATTN_THRESHOLD
+                       and (static_window is not None or window is None))
+        if use_chunked:
+            win = static_window if static_window is not None else 0
+            out = _sdpa_chunked(q, k, v, cfg, win)
+            out = jnp.einsum("bsh,ho->bso", out.reshape(B, S, -1), p["wo"])
+            return out, None
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        if causal:
+            mask = j <= i
+        else:
+            mask = jnp.ones((S, S), dtype=bool)
+        if window is not None:
+            mask = mask & (i - j < window)
+        mask = jnp.broadcast_to(mask[None], (B, S, T))
+
+    out = _sdpa(q, k, v, mask, cfg)
+    out = jnp.einsum("bsh,ho->bso", out.reshape(B, S, -1), p["wo"])
+    return out, new_cache
+
+
+def init_cross_attention(key: jax.Array, cfg: ModelConfig) -> Params:
+    return init_attention(key, cfg)
+
+
+def cross_attention(p: Params, x: jax.Array, enc: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention onto encoder output (no cache growth)."""
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("btd,dh->bth", enc, p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", enc, p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    mask = jnp.ones((B, S, T), dtype=bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsh,ho->bso", out.reshape(B, S, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff), cfg.dtype),
+        "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff), cfg.dtype),
+        "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model), cfg.dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array,
+           cfg: Optional[ModelConfig] = None) -> jax.Array:
+    if cfg is not None and cfg.use_kernels:
+        # PipeOrgan fine-grained pipelining: the (t, f) intermediate tile
+        # stays in VMEM across the gate/up -> down GEMM chain
+        from repro.kernels.ops import mlp_block
+        return mlp_block(x, p["w_gate"], p["w_up"], p["w_down"],
+                         interpret=jax.default_backend() != "tpu",
+                         use_pallas=True)
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = hint(h, "batch", None, "model")
+    return hint(jnp.einsum("bsf,fd->bsd", h, p["w_down"]),
+                "batch", None, None)
+
+
+def init_gelu_mlp(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff), cfg.dtype),
+        "b_in": jnp.zeros((cfg.d_ff,), cfg.dtype),
+        "w_out": dense_init(ks[1], (cfg.d_ff, cfg.d_model), cfg.dtype),
+        "b_out": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = hint(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"]) + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-based, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    E = cfg.n_experts
+    return {
+        "router": dense_init(ks[0], (cfg.d_model, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, cfg.d_model, cfg.d_ff), cfg.dtype),
+        "w_up": dense_init(ks[2], (E, cfg.d_model, cfg.d_ff), cfg.dtype),
+        "w_down": dense_init(ks[3], (E, cfg.d_ff, cfg.d_model), cfg.dtype),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(seq * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k capacity-routed MoE.  Returns (output, aux load-balance loss).
+
+    Routing is per-sample (vmapped over batch) via stable argsort ->
+    (E, C) gather, so no (T, E, C) one-hot is ever materialized and the
+    expert dimension shards cleanly over the model axis (EP).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                 # (B,S,E)
+    gate, idx = jax.lax.top_k(probs, K)                     # (B,S,K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        jnp.ones((B * S * K,), jnp.float32)) / (B * S * K)
+    aux = E * jnp.sum(me * ce)
+
+    def route_one(xb, idxb, gateb):
+        flat_e = idxb.reshape(-1)                           # (S*K,)
+        flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+        flat_g = gateb.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        start = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype),
+                                 side="left")
+        slot = jnp.arange(S * K, dtype=jnp.int32) - start[se].astype(jnp.int32)
+        valid = slot < C
+        slot = jnp.where(valid, slot, C)
+        buf = se.astype(jnp.int32) * (C + 1) + slot
+        tok1 = jnp.zeros((E * (C + 1),), jnp.int32).at[buf].set(
+            jnp.where(valid, st + 1, 0))
+        gbuf = jnp.zeros((E * (C + 1),), jnp.float32).at[buf].set(
+            jnp.where(valid, sg, 0.0))
+        tok1 = tok1.reshape(E, C + 1)[:, :C]                # (E,C) token+1
+        gbuf = gbuf.reshape(E, C + 1)[:, :C]
+        xe = xb[jnp.maximum(tok1 - 1, 0)] * (tok1 > 0)[..., None].astype(
+            xb.dtype)                                       # (E,C,D)
+        xe = hint(xe, "model", None, None)                  # EP over experts
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        ye = ye * gbuf[..., None].astype(ye.dtype)
+        out = jnp.zeros((S + 1, D), xb.dtype).at[tok1.reshape(-1)].add(
+            ye.reshape(-1, D))
+        return out[1:]
+
+    y = jax.vmap(route_one)(x, idx, gate)
+    return hint(y, "batch", None, None), aux

@@ -1,0 +1,116 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)              recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)              input gate
+    a_t = a ** (c * r_t),  a = sigmoid(lambda)  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence runs as a parallel associative scan for
+train/prefill and as a single-step update for decode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import hint
+
+from .common import ModelConfig, Params, dense_init
+
+_C = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+def init_recurrent_block(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.rglru_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d, w), cfg.dtype),       # recurrence branch
+        "w_y": dense_init(ks[1], (d, w), cfg.dtype),       # gate branch
+        "conv_w": dense_init(ks[2], (cfg.conv1d_width, w), cfg.dtype,
+                             scale=cfg.conv1d_width ** -0.5),
+        "conv_b": jnp.zeros((w,), cfg.dtype),
+        "rg_wa": dense_init(ks[3], (w, w), cfg.dtype),
+        "rg_ba": jnp.zeros((w,), jnp.float32),
+        "rg_wx": dense_init(ks[4], (w, w), cfg.dtype),
+        "rg_bx": jnp.zeros((w,), jnp.float32),
+        # lambda init so that a = sigmoid(lambda) in [0.9, 0.999]
+        "rg_lambda": jnp.linspace(2.2, 6.9, w, dtype=jnp.float32),
+        "w_out": dense_init(ks[5], (w, d), cfg.dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B,S,W); w: (K,W).  state: (B,K-1,W)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):, :]
+    return out.astype(x.dtype), new_state
+
+
+def rg_lru(p: Params, x: jax.Array, h0: Optional[jax.Array] = None
+           ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,W) -> (y, h_last).  Parallel scan over S."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, p["rg_wa"].astype(
+        jnp.float32)) + p["rg_ba"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, p["rg_wx"].astype(
+        jnp.float32)) + p["rg_bx"])
+    log_a = -_C * r * jax.nn.softplus(p["rg_lambda"])       # log(a_t) <= 0
+    a = jnp.exp(log_a)
+    gated = i * xf
+    multiplier = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    b = multiplier * gated
+
+    if h0 is not None:
+        # fold the carry into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_scan, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rg_lru_step(p: Params, x: jax.Array, h: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step.  x: (B,1,W); h: (B,W)."""
+    xf = x.astype(jnp.float32)[:, 0, :]
+    r = jax.nn.sigmoid(xf @ p["rg_wa"].astype(jnp.float32) + p["rg_ba"])
+    i = jax.nn.sigmoid(xf @ p["rg_wx"].astype(jnp.float32) + p["rg_bx"])
+    log_a = -_C * r * jax.nn.softplus(p["rg_lambda"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    h_new = a * h.astype(jnp.float32) + mult * (i * xf)
+    return h_new[:, None, :].astype(x.dtype), h_new
+
+
+def recurrent_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                    state: Optional[Tuple[jax.Array, jax.Array]] = None
+                    ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Griffin recurrent block.  state = (conv_state, h) for decode."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_y"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    gate = hint(gate, "batch", None, "model")
+    u = hint(jnp.einsum("bsd,dw->bsw", x, p["w_x"]),
+             "batch", None, "model")
+    conv_state = state[0] if state is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+    if state is not None and x.shape[1] == 1:
+        y, h = rg_lru_step(p, u, state[1])
+    else:
+        h0 = state[1] if state is not None else None
+        y, h = rg_lru(p, u, h0)
+    out = jnp.einsum("bsw,wd->bsd", y * gate, p["w_out"])
+    return out, (new_conv, h)

@@ -1,0 +1,142 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus channel mixing.
+
+Time mixing (per head, head dim N):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: N x N)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+The model path runs the recurrence as a lax.scan over time-chunks (exact);
+``repro.kernels.rwkv6`` provides the TPU Pallas kernel for the chunked
+parallel form.  Decode carries (token_shift, S) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Params, dense_init
+
+_LORA_RANK = 32
+
+
+def init_time_mix(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    heads = d // 64                                  # rwkv6 head size 64
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(
+            cfg.dtype),                              # ddlerp biases (r,k,v,w,g)
+        "lora_a": dense_init(ks[1], (d, _LORA_RANK * 5), cfg.dtype),
+        "lora_b": dense_init(ks[2], (5, _LORA_RANK, d), cfg.dtype),
+        "w_r": dense_init(ks[3], (d, d), cfg.dtype),
+        "w_k": dense_init(ks[4], (d, d), cfg.dtype),
+        "w_v": dense_init(ks[5], (d, d), cfg.dtype),
+        "w_g": dense_init(ks[6], (d, d), cfg.dtype),
+        "w_o": dense_init(ks[7], (d, d), cfg.dtype),
+        "w_decay": dense_init(ks[8], (d, d), cfg.dtype,
+                              scale=0.1 * d ** -0.5),
+        "decay_bias": jnp.full((d,), -4.0, jnp.float32),
+        "bonus_u": (0.5 * jax.random.uniform(ks[9], (heads, 64),
+                                             jnp.float32)).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),   # group-norm on output
+    }
+
+
+def init_channel_mix(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, cfg.dtype),
+        "w_k": dense_init(ks[0], (d, f), cfg.dtype),
+        "w_v": dense_init(ks[1], (f, d), cfg.dtype),
+        "w_r": dense_init(ks[2], (d, d), cfg.dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """shift(x)_t = x_{t-1}; `last` is the carry token for decode."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1, :])
+    return jnp.concatenate([last, x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p: Params, x: jax.Array, shifted: jax.Array) -> Tuple[jax.Array, ...]:
+    """Finch data-dependent lerp producing the 5 mixed streams."""
+    delta = shifted - x
+    lora_in = jnp.einsum("bsd,dr->bsr", delta, p["lora_a"])
+    lora_in = jnp.tanh(lora_in.astype(jnp.float32)).astype(x.dtype)
+    lora_in = lora_in.reshape(*lora_in.shape[:-1], 5, _LORA_RANK)
+    adj = jnp.einsum("bsir,ird->bsid", lora_in, p["lora_b"])
+    mix = p["mu"][None, None] + adj                          # (B,S,5,D)
+    streams = x[:, :, None, :] + delta[:, :, None, :] * mix
+    return tuple(streams[:, :, i, :] for i in range(5))
+
+
+def _wkv_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, s0: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Exact WKV-6 recurrence via scan over time.
+
+    r,k,v: (B,S,H,N); w: (B,S,H,N) decay in (0,1); u: (H,N) bonus;
+    s0: (B,H,N,N).  Returns y (B,S,H,N) and final state.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # (B,H,N) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)            # (B,H,N,N)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), s_last
+
+
+def time_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+             state: Optional[Tuple[jax.Array, jax.Array]] = None
+             ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """RWKV6 attention replacement.  state = (last_token, S)."""
+    B, S, D = x.shape
+    H, N = D // 64, 64
+    last = state[0] if state is not None else None
+    shifted = _token_shift(x, last)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, shifted)
+
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(B, S, H, N)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    decay_raw = jnp.einsum("bsd,de->bse", xw, p["w_decay"]).astype(
+        jnp.float32) + p["decay_bias"]
+    w = jnp.exp(-jnp.exp(decay_raw)).reshape(B, S, H, N)     # in (0,1)
+
+    s0 = (state[1] if state is not None
+          else jnp.zeros((B, H, N, N), jnp.float32))
+    y, s_last = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w, p["bonus_u"], s0)
+    y = y.reshape(B, S, D)
+    # per-head group norm
+    yh = y.reshape(B, S, H, N)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (yh.reshape(B, S, D) * p["ln_x_scale"]).astype(x.dtype) * g
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    return out, (x[:, -1:, :], s_last)
+
+
+def channel_mix(p: Params, x: jax.Array,
+                state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """RWKV squared-relu FFN with token shift.  state = last token."""
+    shifted = _token_shift(x, state)
+    xk = x + (shifted - x) * p["mu_k"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_r"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * kv, x[:, -1:, :]

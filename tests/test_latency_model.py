@@ -1,0 +1,65 @@
+"""Fig.-3 latency model invariants (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PAPER_HW as HW, Topology
+from repro.core.dataflow import choose_dataflow
+from repro.core.depth import Segment
+from repro.core.graph import chain, conv
+from repro.core.planner import _plan_segment
+from repro.core.noc import Flow, TrafficStats, analyze
+
+
+def _plan(h, c, depth, topology=Topology.MESH):
+    g = chain("p", [conv(f"c{i}", 1, h, h, c, c, r=3)
+                    for i in range(depth)])
+    df = lambda op, hw_, i, budget: choose_dataflow(op, hw_, budget)
+    return _plan_segment(g, Segment(0, depth), HW, topology, df, None, None)
+
+
+@given(st.sampled_from([16, 32, 64]), st.sampled_from([8, 16, 32]),
+       st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_latency_at_least_compute_bound(h, c, depth):
+    plan = _plan(h, c, depth)
+    assert plan.cost.latency_cycles >= plan.cost.compute_cycles * 0.99
+    assert np.isfinite(plan.cost.latency_cycles)
+    assert plan.cost.dram_bytes >= 0
+    assert plan.cost.total_energy > 0
+
+
+@given(st.sampled_from([16, 32, 64]), st.sampled_from([8, 16, 32]))
+@settings(max_examples=15, deadline=None)
+def test_pipelining_bounded_by_serial(h, c):
+    """Pipelined depth-2 latency never exceeds ~2x the two ops run alone
+    (pipelining can't be catastrophically worse than serial)."""
+    d2 = _plan(h, c, 2).cost.latency_cycles
+    d1 = sum(_plan(h, c, 1).cost.latency_cycles for _ in range(2))
+    assert d2 <= 2.5 * d1
+
+
+def test_congested_delay_monotone_in_load():
+    """interval delay is monotone in channel load at fixed interval."""
+    prev = 0.0
+    for load in (1.0, 4.0, 16.0, 64.0):
+        st_ = TrafficStats(Topology.MESH, load, load * 4, load * 4, 4, 4, 64)
+        d = st_.interval_comm_delay(2.0)
+        assert d >= prev
+        prev = d
+
+
+def test_comm_delay_never_below_interval():
+    for load in (0.0, 0.5, 2.0, 100.0):
+        st_ = TrafficStats(Topology.MESH, load, 0, 0, 3, 1, 64)
+        assert st_.interval_comm_delay(5.0) >= 5.0
+
+
+def test_amp_never_increases_hops():
+    """Any flow set: AMP path hops <= mesh path hops (express are extra)."""
+    flows = [Flow((0, 0), (r, c), 1.0) for r in range(0, 32, 5)
+             for c in range(0, 32, 7)]
+    mesh = analyze(flows, HW, Topology.MESH)
+    amp = analyze(flows, HW, Topology.AMP)
+    assert amp.max_path_hops <= mesh.max_path_hops
+    assert amp.total_hop_words <= mesh.total_hop_words

@@ -1,0 +1,62 @@
+"""Pod-level PipeOrgan placement: properties + cost-model behaviour."""
+import numpy as np
+import pytest
+
+from repro.distributed.pipeline import (StageOrg, choose_placement,
+                                        handoff_permutation, hop_distance,
+                                        placement_cost, stage_of_device)
+
+
+@pytest.mark.parametrize("org", list(StageOrg))
+@pytest.mark.parametrize("n_stages,n_dev", [(2, 16), (4, 16), (8, 16),
+                                            (4, 64), (16, 16)])
+def test_stage_cover(org, n_stages, n_dev):
+    stages = stage_of_device(org, n_stages, n_dev)
+    assert len(stages) == n_dev
+    counts = np.bincount(stages, minlength=n_stages)
+    assert counts.sum() == n_dev
+    assert (counts == n_dev // n_stages).all()
+
+
+@pytest.mark.parametrize("org", list(StageOrg))
+def test_permutation_is_valid(org):
+    perm = handoff_permutation(org, 4, 16)
+    srcs = [s for s, _ in perm]
+    assert sorted(srcs) == list(range(16))     # every device sends once
+
+
+def test_striped_is_one_hop():
+    """Fig. 10 at pod scale: striping makes every handoff a neighbour."""
+    perm = handoff_permutation(StageOrg.STRIPED, 4, 16)
+    non_wrap = [(s, d) for s, d in perm
+                if hop_distance(s, d, 16, torus=True) > 1]
+    assert not non_wrap
+
+
+def test_blocked_pays_block_distance():
+    perm = handoff_permutation(StageOrg.BLOCKED, 4, 16)
+    dists = [hop_distance(s, d, 16, torus=True) for s, d in perm]
+    assert max(dists) >= 4     # crosses a 4-device block
+
+
+def test_striped_beats_blocked_on_handoff():
+    b = placement_cost(StageOrg.BLOCKED, 4, 16, 1e9)
+    s = placement_cost(StageOrg.STRIPED, 4, 16, 1e9)
+    assert s["worst_link_bytes"] < b["worst_link_bytes"]
+    assert s["max_hops"] <= b["max_hops"]
+
+
+def test_torus_wrap_rescues_blocked():
+    """AMP analogue: wrap-around links cut blocked's loop-back cost."""
+    ring = placement_cost(StageOrg.BLOCKED, 4, 16, 1e9, torus=True)
+    line = placement_cost(StageOrg.BLOCKED, 4, 16, 1e9, torus=False)
+    assert ring["max_hops"] < line["max_hops"]
+
+
+def test_choose_placement_tradeoff():
+    # pipelining-dominated traffic -> striped
+    assert choose_placement(4, 16, bytes_per_handoff=1e9,
+                            tp_bytes_per_stage=1e6) == StageOrg.STRIPED
+    # TP-dominated -> blocked (keep collectives local)
+    assert choose_placement(4, 16, bytes_per_handoff=1e6,
+                            tp_bytes_per_stage=1e9) == StageOrg.BLOCKED

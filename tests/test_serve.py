@@ -1,0 +1,53 @@
+"""Continuous-batching serve engine."""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.runtime.serve_loop import Request, ServeEngine
+
+
+def _engine(slots=2, max_len=64):
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(params, cfg, batch_slots=slots, max_len=max_len), cfg
+
+
+def test_engine_completes_all_requests():
+    eng, cfg = _engine(slots=2)
+    reqs = [Request(rid=i, prompt=[3 + i, 7, 11], max_new_tokens=5)
+            for i in range(5)]       # more requests than slots
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert r.done
+        assert len(r.output) == 5
+        assert all(0 <= t < cfg.vocab for t in r.output)
+
+
+def test_engine_respects_budgets():
+    eng, _ = _engine(slots=1)
+    a = Request(rid=0, prompt=[1], max_new_tokens=3)
+    b = Request(rid=1, prompt=[2, 3], max_new_tokens=7)
+    eng.submit(a)
+    eng.submit(b)
+    done = eng.run()
+    assert [len(r.output) for r in sorted(done, key=lambda r: r.rid)] \
+        == [3, 7]
+
+
+def test_engine_eos_stops_early():
+    eng, cfg = _engine(slots=1)
+    # discover what the model emits first, then use it as EOS
+    probe = Request(rid=0, prompt=[5, 9], max_new_tokens=1)
+    eng.submit(probe)
+    first = eng.run()[0].output[0]
+
+    eng2, _ = _engine(slots=1)
+    req = Request(rid=1, prompt=[5, 9], max_new_tokens=50, eos_id=first)
+    eng2.submit(req)
+    done = eng2.run()
+    assert done[0].output[-1] == first
+    assert len(done[0].output) < 50
