@@ -45,6 +45,9 @@ def _derived(name: str, rows) -> str:
             return f"configs={len(rows)}"
         if name == "fig06_skips":
             return f"max_skips={max(r['n_skips'] for r in rows)}"
+        if name == "planner_speed":
+            tot = [r for r in rows if r.get("task") == "TOTAL"][0]
+            return f"dp_speedup_vs_reference={tot['speedup']}"
         if name == "amp_ablation":
             amp = [r for r in rows if r["topology"] == "amp"
                    and r["strategy"] == "tangram-like"][0]

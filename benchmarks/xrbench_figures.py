@@ -1,4 +1,10 @@
-"""Paper-figure reproductions (Figs. 5, 6, 13-17) on the core simulator."""
+"""Paper-figure reproductions (Figs. 5, 6, 13-17) on the core simulator.
+
+All planning goes through one shared ``Planner`` facade: the figures
+re-plan the same (task, strategy, topology) combinations constantly
+(fig13/fig14/fig16/fig17 all want pipeorgan@AMP), so the LRU plan cache
+collapses the suite's planning cost to one planning pass.
+"""
 from __future__ import annotations
 
 import math
@@ -6,13 +12,19 @@ import time
 from typing import Dict, List
 
 from repro.configs.xrbench import all_tasks
-from repro.core import (PAPER_HW, Topology, plan_layer_by_layer,
-                        plan_pipeorgan, plan_simba_like, plan_tangram_like)
+from repro.core import PAPER_HW, Planner, Topology, get_planner
 from repro.core.dataflow import (achieved_arithmetic_intensity,
                                  best_case_arithmetic_intensity,
                                  choose_dataflow)
 from repro.core.depth import segment_depths
 from repro.core.granularity import finest_granularity
+
+_PLANNER = get_planner()
+
+
+def _plan(g, strategy: str = "pipeorgan", topology: Topology = None):
+    return _PLANNER.plan(g, hw=PAPER_HW, topology=topology,
+                         strategy=strategy)
 
 
 def fig05_aw_ratios() -> List[dict]:
@@ -47,9 +59,9 @@ def fig13_performance() -> List[dict]:
     rows = []
     sp_tg, sp_sb = [], []
     for name, g in all_tasks().items():
-        po = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
-        tg = plan_tangram_like(g, PAPER_HW)
-        sb = plan_simba_like(g, PAPER_HW)
+        po = _plan(g, "pipeorgan", Topology.AMP)
+        tg = _plan(g, "tangram")
+        sb = _plan(g, "simba")
         s_tg = tg.latency_cycles / po.latency_cycles
         s_sb = sb.latency_cycles / po.latency_cycles
         sp_tg.append(s_tg)
@@ -70,8 +82,8 @@ def fig14_dram() -> List[dict]:
     rows = []
     ratios = []
     for name, g in all_tasks().items():
-        po = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
-        tg = plan_tangram_like(g, PAPER_HW)
+        po = _plan(g, "pipeorgan", Topology.AMP)
+        tg = _plan(g, "tangram")
         r = po.dram_bytes / tg.dram_bytes
         ratios.append(r)
         rows.append({"task": name, "dram_ratio": round(r, 3)})
@@ -122,7 +134,7 @@ def fig16_depth() -> List[dict]:
     """Chosen pipeline depths per task (paper Fig. 16)."""
     rows = []
     for name, g in all_tasks().items():
-        po = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+        po = _plan(g, "pipeorgan", Topology.AMP)
         depths = [s.segment.depth for s in po.segments]
         heur = segment_depths(g, PAPER_HW)
         rows.append({
@@ -142,7 +154,7 @@ def fig17_granularity() -> List[dict]:
     """Finest possible granularities from stage 1 (paper Fig. 17)."""
     rows = []
     for name, g in all_tasks().items():
-        po = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+        po = _plan(g, "pipeorgan", Topology.AMP)
         grans = [gr.elements for s in po.segments for gr in s.granularities
                  if gr.pipelinable]
         if not grans:
@@ -222,12 +234,12 @@ def amp_ablation() -> List[dict]:
     topos = [Topology.MESH, Topology.AMP, Topology.TORUS,
              Topology.FLATTENED_BUTTERFLY]
     gm = lambda xs: math.exp(sum(math.log(x) for x in xs) / len(xs))
-    for strategy, plan_fn in [("pipeorgan", plan_pipeorgan),
-                              ("tangram-like", plan_tangram_like)]:
+    for strategy, strat_key in [("pipeorgan", "pipeorgan"),
+                                ("tangram-like", "tangram")]:
         lat = {t: [] for t in topos}
         for name, g in all_tasks().items():
             for t in topos:
-                lat[t].append(plan_fn(g, PAPER_HW, t).latency_cycles)
+                lat[t].append(_plan(g, strat_key, t).latency_cycles)
         base = gm(lat[Topology.MESH])
         for t in topos:
             rows.append({
@@ -237,6 +249,44 @@ def amp_ablation() -> List[dict]:
                 "links_32x32": topology_link_count(
                     32, 32, t, PAPER_HW.amp_link_len),
             })
+    return rows
+
+
+def planner_speed() -> List[dict]:
+    """End-to-end ``plan_pipeorgan`` wall-clock over all XR-Bench tasks:
+    the memoized DP + vectorized NoC planner vs the pre-refactor scalar
+    planner, plus the facade's warm-cache path (inline-serving cost)."""
+    import repro.core.planner as planner_mod
+    from repro.core import plan_pipeorgan, plan_pipeorgan_reference
+
+    # cold start: drop every cross-call cache so the DP pays full price
+    planner_mod._pair_traffic.cache_clear()
+    planner_mod._cached_place.cache_clear()
+    planner_mod._span_plan_cache.clear()
+    warm_planner = Planner(maxsize=64)
+
+    rows = []
+    t_dp_total = t_ref_total = 0.0
+    for name, g in all_tasks().items():
+        t0 = time.perf_counter()
+        plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+        t_dp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        plan_pipeorgan_reference(g, PAPER_HW, Topology.AMP)
+        t_ref = time.perf_counter() - t0
+        warm_planner.plan(g, PAPER_HW, Topology.AMP)
+        t0 = time.perf_counter()
+        warm_planner.plan(g, PAPER_HW, Topology.AMP)
+        t_warm = time.perf_counter() - t0
+        t_dp_total += t_dp
+        t_ref_total += t_ref
+        rows.append({"task": name, "dp_s": round(t_dp, 4),
+                     "reference_s": round(t_ref, 4),
+                     "facade_hit_us": round(t_warm * 1e6, 1),
+                     "speedup": round(t_ref / t_dp, 2)})
+    rows.append({"task": "TOTAL", "dp_s": round(t_dp_total, 3),
+                 "reference_s": round(t_ref_total, 3),
+                 "speedup": round(t_ref_total / t_dp_total, 2)})
     return rows
 
 
@@ -251,4 +301,5 @@ FIGURES = {
     "dataflow_validation": dataflow_validation,
     "traffic_patterns": traffic_patterns,
     "amp_ablation": amp_ablation,
+    "planner_speed": planner_speed,
 }

@@ -27,3 +27,18 @@ print("  pipelining-dominated ->",
       choose_placement(4, N_DEV, 1e9, 1e6).value)
 print("  TP-collective-dominated ->",
       choose_placement(4, N_DEV, 1e6, 1e9).value)
+
+# chip scale: the same organization question, answered end-to-end by the
+# Planner facade (spatial org + depth chosen per segment by the DP mapper)
+from repro.configs.xrbench import all_tasks
+from repro.core import PAPER_HW, get_planner
+
+plan = get_planner().plan(all_tasks()["hand_tracking"], hw=PAPER_HW)
+print("\nchip-scale plan (hand_tracking via Planner facade):")
+for s in plan.segments[:8]:
+    org = s.org.value if s.org is not None else "-"
+    print(f"  ops[{s.segment.start:3d}:{s.segment.stop:3d}] depth "
+          f"{s.segment.depth}  org {org:16s} "
+          f"latency {s.cost.latency_cycles:.3e}")
+print(f"  ... {len(plan.segments)} segments, total latency "
+      f"{plan.latency_cycles:.3e} cycles")

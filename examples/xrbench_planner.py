@@ -1,10 +1,13 @@
 """Sweep all XR-bench tasks across topologies — the paper's design-time
-traffic analysis (Figs. 8-12) driven end to end.
+traffic analysis (Figs. 8-12) driven end to end through the ``Planner``
+facade (plans are LRU-cached, so re-running a task/topology is free).
 
     PYTHONPATH=src python examples/xrbench_planner.py
 """
 from repro.configs.xrbench import all_tasks
-from repro.core import PAPER_HW, Topology, plan_pipeorgan
+from repro.core import PAPER_HW, Topology, get_planner
+
+planner = get_planner()
 
 print(f"{'task':22s} {'mesh':>12s} {'AMP':>12s} {'torus':>12s} "
       f"{'fbfly':>12s}")
@@ -12,9 +15,10 @@ for name, g in all_tasks().items():
     row = [name]
     for topo in (Topology.MESH, Topology.AMP, Topology.TORUS,
                  Topology.FLATTENED_BUTTERFLY):
-        plan = plan_pipeorgan(g, PAPER_HW, topo)
+        plan = planner.plan(g, hw=PAPER_HW, topology=topo)
         row.append(f"{plan.latency_cycles:.3e}")
     print(f"{row[0]:22s} {row[1]:>12s} {row[2]:>12s} {row[3]:>12s} "
           f"{row[4]:>12s}")
 print("\nlatency cycles per inference; lower is better.  AMP recovers "
       "most of flattened-butterfly's benefit at <2x mesh wiring.")
+print(f"plan cache: {planner.cache_info()}")

@@ -9,18 +9,25 @@ Stage 1 — pipelined-dataflow optimization (HW-agnostic):
 Stage 2 — HW mapping and NoC architecture:
   spatial.py      blocked/striped/checkerboard spatial organizations
   noc.py          mesh/AMP/torus/flattened-butterfly traffic analysis
+                  (vectorized `analyze` + scalar `analyze_reference`)
   pipeline_model.py  Fig. 3 interval latency + energy model
-  planner.py      end-to-end flow + TANGRAM-like / SIMBA-like baselines
+  planner.py      memoized cut-point DP flow + TANGRAM/SIMBA baselines
+  planner_service.py  `Planner` facade with an LRU plan cache
 """
 from .dataflow import Dataflow, choose_dataflow, best_case_arithmetic_intensity
 from .depth import Segment, segment_depths, segment_graph
 from .granularity import Granularity, finest_granularity
 from .graph import Graph, Op, OpKind, add, chain, concat, conv, dwconv, gemm
 from .hwconfig import HWConfig, PAPER_HW, TPU_V5E
-from .noc import Flow, Topology, TrafficStats, analyze, segment_flows
+from .noc import (Flow, FlowBatch, Topology, TrafficStats, analyze,
+                  analyze_reference, multicast_flow_batch, pair_flow_batch,
+                  segment_flows)
 from .pipeline_model import SegmentCost, segment_cost
 from .planner import (PlanResult, SegmentPlan, STRATEGIES, plan_layer_by_layer,
-                      plan_pipeorgan, plan_simba_like, plan_tangram_like)
+                      plan_pipeorgan, plan_pipeorgan_reference,
+                      plan_pipeorgan_uniform, plan_simba_like,
+                      plan_tangram_like)
+from .planner_service import CacheInfo, Planner, get_planner, graph_fingerprint
 from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
 
 __all__ = [
@@ -29,9 +36,13 @@ __all__ = [
     "Granularity", "finest_granularity",
     "Graph", "Op", "OpKind", "add", "chain", "concat", "conv", "dwconv",
     "gemm", "HWConfig", "PAPER_HW", "TPU_V5E",
-    "Flow", "Topology", "TrafficStats", "analyze", "segment_flows",
+    "Flow", "FlowBatch", "Topology", "TrafficStats", "analyze",
+    "analyze_reference", "multicast_flow_batch", "pair_flow_batch",
+    "segment_flows",
     "SegmentCost", "segment_cost",
     "PlanResult", "SegmentPlan", "STRATEGIES", "plan_layer_by_layer",
-    "plan_pipeorgan", "plan_simba_like", "plan_tangram_like",
+    "plan_pipeorgan", "plan_pipeorgan_reference", "plan_pipeorgan_uniform",
+    "plan_simba_like", "plan_tangram_like",
+    "CacheInfo", "Planner", "get_planner", "graph_fingerprint",
     "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org", "place",
 ]

@@ -30,6 +30,16 @@ class Segment:
     def __contains__(self, idx: int) -> bool:
         return self.start <= idx < self.stop
 
+    def spans_from(self, i: int, max_span: int) -> range:
+        """Valid end points j for a sub-segment [i, j) of this segment.
+
+        Used by the planner's cut-point DP: from position i it may cut at
+        any j up to ``max_span`` ops away, clipped to the segment end.
+        """
+        if not self.start <= i < self.stop:
+            raise ValueError(f"position {i} outside {self}")
+        return range(i + 1, min(i + max_span, self.stop) + 1)
+
 
 def _activation_footprint(g: Graph, start: int, stop: int) -> int:
     """A_l + A_{l+D} + skip activations crossing the segment boundary.

@@ -8,6 +8,13 @@ Latency rule (Sec. VI-C / Fig. 15): an interval is congestion-free when the
 compute interval >= worst-case channel load (in cycles; 1 word/link/cycle).
 When congested, "the overall interval delay is worst-case channel load x
 compute interval".
+
+Two engines compute the same statistics:
+
+  * ``analyze``            — batched numpy path expansion; all flows are
+    routed and accumulated onto links at once (planner hot path).
+  * ``analyze_reference``  — the original per-flow scalar walk, kept as the
+    semantic reference; tests assert the two agree on every topology.
 """
 from __future__ import annotations
 
@@ -145,8 +152,207 @@ def topology_link_count(rows: int, cols: int, topology: Topology,
     raise ValueError(topology)
 
 
-def analyze(flows: Sequence[Flow], hw: HWConfig, topology: Topology
-            ) -> TrafficStats:
+@dataclasses.dataclass
+class FlowBatch:
+    """Structure-of-arrays flow set for the vectorized NoC engine.
+
+    Carries the same information as a ``Sequence[Flow]`` — ``src[i]`` /
+    ``dst[i]`` are (row, col) and ``words[i]`` the per-interval volume —
+    but as numpy arrays so ``analyze`` can expand every path at once.
+    Order is significant: the adaptive last-hop port arbitration assigns
+    ingress ports in flow order, exactly like the scalar engine.
+    """
+    src: np.ndarray    # int64 [n, 2]
+    dst: np.ndarray    # int64 [n, 2]
+    words: np.ndarray  # float64 [n]
+
+    def __len__(self) -> int:
+        return int(self.words.shape[0])
+
+    @staticmethod
+    def empty() -> "FlowBatch":
+        return FlowBatch(np.zeros((0, 2), np.int64), np.zeros((0, 2), np.int64),
+                         np.zeros(0, np.float64))
+
+    @staticmethod
+    def from_flows(flows: Sequence[Flow]) -> "FlowBatch":
+        if not flows:
+            return FlowBatch.empty()
+        return FlowBatch(np.array([f.src for f in flows], np.int64),
+                         np.array([f.dst for f in flows], np.int64),
+                         np.array([f.words for f in flows], np.float64))
+
+    @staticmethod
+    def concat(batches: Sequence["FlowBatch"]) -> "FlowBatch":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return FlowBatch.empty()
+        if len(batches) == 1:
+            return batches[0]
+        return FlowBatch(np.concatenate([b.src for b in batches]),
+                         np.concatenate([b.dst for b in batches]),
+                         np.concatenate([b.words for b in batches]))
+
+    def to_flows(self) -> List[Flow]:
+        return [Flow((int(s[0]), int(s[1])), (int(d[0]), int(d[1])), float(w))
+                for s, d, w in zip(self.src, self.dst, self.words)]
+
+
+def _expand(counts: np.ndarray):
+    """(flow_idx, step_within_flow) arrays for per-flow step counts."""
+    total = int(counts.sum())
+    fidx = np.repeat(np.arange(counts.shape[0]), counts)
+    starts = np.cumsum(counts) - counts
+    t = np.arange(total) - np.repeat(starts, counts)
+    return fidx, t
+
+
+def analyze(flows, hw: HWConfig, topology: Topology) -> TrafficStats:
+    """Vectorized traffic analysis over all flows at once.
+
+    Accepts a ``FlowBatch`` or any ``Sequence[Flow]``.  Matches
+    ``analyze_reference`` exactly: paths are expanded in (flow, hop) order
+    before per-link accumulation, so channel loads — including the
+    order-dependent adaptive last-hop port arbitration — come out
+    bit-identical to the scalar walk.
+    """
+    fb = flows if isinstance(flows, FlowBatch) else FlowBatch.from_flows(flows)
+    rows, cols = hw.pe_rows, hw.pe_cols
+    express = hw.amp_link_len if topology == Topology.AMP else 1
+    link_count = topology_link_count(rows, cols, topology, express)
+
+    sr = fb.src[:, 0].astype(np.int64)
+    sc = fb.src[:, 1].astype(np.int64)
+    dr = fb.dst[:, 0].astype(np.int64)
+    dc = fb.dst[:, 1].astype(np.int64)
+    w = fb.words.astype(np.float64)
+    keep = (w > 0) & ((sr != dr) | (sc != dc))
+    sr, sc, dr, dc, w = sr[keep], sc[keep], dr[keep], dc[keep], w[keep]
+    n = int(w.shape[0])
+    if n == 0:
+        return TrafficStats(topology, 0.0, 0.0, 0.0, 0, 0, link_count)
+
+    N = rows * cols
+    dstn = dr * cols + dc
+
+    # adaptive last-hop arbitration: the k-th flow converging on a consumer
+    # PE takes ingress port k mod 4 — a stable group-cumcount by dst node
+    order = np.argsort(dstn, kind="stable")
+    sorted_d = dstn[order]
+    grp_start = np.flatnonzero(np.r_[True, sorted_d[1:] != sorted_d[:-1]])
+    grp_sizes = np.diff(np.r_[grp_start, n])
+    cum = np.arange(n) - np.repeat(grp_start, grp_sizes)
+    port = np.empty(n, np.int64)
+    port[order] = cum % 4
+
+    # ---- batched dimension-ordered path expansion ---------------------------
+    phases = []  # (flow_idx, global_step, src_node, dst_node, wire_len)
+    if topology == Topology.FLATTENED_BUTTERFLY:
+        hasx = sc != dc
+        hasy = sr != dr
+        fx = np.flatnonzero(hasx)
+        phases.append((fx, np.zeros(fx.size, np.int64),
+                       sr[fx] * cols + sc[fx], sr[fx] * cols + dc[fx],
+                       np.abs(dc[fx] - sc[fx])))
+        fy = np.flatnonzero(hasy)
+        phases.append((fy, hasx[fy].astype(np.int64),
+                       sr[fy] * cols + dc[fy], dr[fy] * cols + dc[fy],
+                       np.abs(dr[fy] - sr[fy])))
+        path_len = hasx.astype(np.int64) + hasy.astype(np.int64)
+    else:
+        wrap = topology == Topology.TORUS
+        dx = dc - sc
+        dy = dr - sr
+        if wrap:
+            dx = np.where(np.abs(dx) > cols // 2, dx - cols * np.sign(dx), dx)
+            dy = np.where(np.abs(dy) > rows // 2, dy - rows * np.sign(dy), dy)
+        sx = np.where(dx >= 0, 1, -1)
+        sy = np.where(dy >= 0, 1, -1)
+        ax, ay = np.abs(dx), np.abs(dy)
+        use_express = topology == Topology.AMP and express > 1
+        ex = ax // express if use_express else np.zeros_like(ax)
+        ey = ay // express if use_express else np.zeros_like(ay)
+        ux, uy = ax - ex * express, ay - ey * express
+        path_len = ex + ux + ey + uy
+
+        def walk(counts, start, stride, fixed, along_cols, step_off, wlen,
+                 size):
+            fidx, t = _expand(counts)
+            if fidx.size == 0:
+                return None
+            cur = start[fidx] + stride[fidx] * t
+            nxt = cur + stride[fidx]
+            if wrap:
+                cur, nxt = cur % size, nxt % size
+            if along_cols:
+                s_node = fixed[fidx] * cols + cur
+                d_node = fixed[fidx] * cols + nxt
+            else:
+                s_node = cur * cols + fixed[fidx]
+                d_node = nxt * cols + fixed[fidx]
+            return (fidx, step_off[fidx] + t, s_node, d_node,
+                    np.full(fidx.size, wlen, np.int64))
+
+        for ph in (walk(ex, sc, sx * express, sr, True,
+                        np.zeros(n, np.int64), express, cols),
+                   walk(ux, sc + sx * ex * express, sx, sr, True, ex, 1,
+                        cols),
+                   walk(ey, sr, sy * express, dc, False, ex + ux, express,
+                        rows),
+                   walk(uy, sr + sy * ey * express, sy, dc, False,
+                        ex + ux + ey, 1, rows)):
+            if ph is not None:
+                phases.append(ph)
+
+    # Scatter every phase into a flow-major layout: link k of flow f lands
+    # at path_start[f] + k.  This reproduces the scalar walk's (flow, hop)
+    # accumulation order exactly — same float rounding, no sort needed.
+    total = int(path_len.sum())
+    path_start = np.cumsum(path_len) - path_len
+    srcn_all = np.empty(total, np.int64)
+    dstn_all = np.empty(total, np.int64)
+    wire_all = np.empty(total, np.int64)
+    for fidx, step, s_node, d_node, wlen in phases:
+        pos = path_start[fidx] + step
+        srcn_all[pos] = s_node
+        dstn_all[pos] = d_node
+        wire_all[pos] = wlen
+    fidx_all = np.repeat(np.arange(n), path_len)
+    words_l = w[fidx_all]
+
+    is_last = np.zeros(total, bool)
+    is_last[path_start + path_len - 1] = True
+    codes = np.where(is_last,
+                     N * N + dstn[fidx_all] * 4 + port[fidx_all],
+                     srcn_all * N + dstn_all)
+    code_span = N * N + 4 * N + 4
+    if code_span < 2 ** 31:
+        codes = codes.astype(np.int32)   # smaller keys sort faster
+    if codes.shape[0] > 65536:
+        # dense accumulation: one C pass over the code space, no big sort
+        loads = np.bincount(codes, weights=words_l, minlength=code_span)
+        uniq = np.unique(codes)
+        worst = float(loads[uniq].max())
+        used = int(uniq.shape[0])
+    else:
+        uniq, inv = np.unique(codes, return_inverse=True)
+        loads = np.bincount(inv, weights=words_l)
+        worst = float(loads.max())
+        used = int(uniq.shape[0])
+    return TrafficStats(
+        topology=topology,
+        worst_channel_load=worst,
+        total_hop_words=float(np.sum(w * path_len)),
+        total_wire_words=float(np.sum(words_l * wire_all)),
+        max_path_hops=int(path_len.max()),
+        num_links_used=used,
+        link_count=link_count,
+    )
+
+
+def analyze_reference(flows: Sequence[Flow], hw: HWConfig, topology: Topology
+                      ) -> TrafficStats:
+    """Scalar per-flow reference walk (the pre-vectorization engine)."""
     rows, cols = hw.pe_rows, hw.pe_cols
     express = hw.amp_link_len if topology == Topology.AMP else 1
     load: Dict[object, float] = defaultdict(float)
@@ -246,6 +452,70 @@ def multicast_flows(placement: Placement, src_slot: int, dst_slot: int,
             flows.append(Flow(hop_from, d, per_src))
             hop_from = d
     return flows
+
+
+def pair_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
+                    words_per_interval: float) -> FlowBatch:
+    """Batched ``pair_flows``: same flows, same order, as a ``FlowBatch``."""
+    src_a = placement.pes_of(src_slot)
+    dst_a = placement.pes_of(dst_slot)
+    if src_a.size == 0 or dst_a.size == 0:
+        return FlowBatch.empty()
+    d = (np.abs(src_a[:, None, 0] - dst_a[None, :, 0])
+         + np.abs(src_a[:, None, 1] - dst_a[None, :, 1]))
+    nearest = np.argmin(d, axis=1)
+    per_src = words_per_interval / len(src_a)
+    return FlowBatch(src_a.astype(np.int64),
+                     dst_a[nearest].astype(np.int64),
+                     np.full(len(src_a), per_src, np.float64))
+
+
+def multicast_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
+                         words_per_interval: float) -> FlowBatch:
+    """Batched ``multicast_flows``: same chains, same order, as arrays.
+
+    The scalar version's tie-breaks are replicated exactly: the nearest
+    consumer column resolves ties toward the smaller column (first minimum)
+    and each column chain is a *stable* sort of ascending rows by distance.
+    """
+    src = placement.pes_of(src_slot).astype(np.int64)   # row-major order
+    dst = placement.pes_of(dst_slot).astype(np.int64)
+    if src.size == 0 or dst.size == 0:
+        return FlowBatch.empty()
+    n_src = src.shape[0]
+    per_src = words_per_interval / n_src
+    cols_u, col_inv = np.unique(dst[:, 1], return_inverse=True)
+    rows_by_col = [dst[col_inv == ci, 0] for ci in range(cols_u.shape[0])]
+    col_idx = np.argmin(np.abs(cols_u[None, :] - src[:, 1:2]), axis=1)
+    col_sizes = np.array([r.shape[0] for r in rows_by_col], np.int64)
+    chain_len = col_sizes[col_idx]
+    offsets = np.cumsum(chain_len) - chain_len
+    total = int(chain_len.sum())
+    o_sr = np.empty(total, np.int64)
+    o_sc = np.empty(total, np.int64)
+    o_dr = np.empty(total, np.int64)
+    o_dc = np.empty(total, np.int64)
+    for ci, c in enumerate(cols_u):
+        mask = col_idx == ci
+        if not mask.any():
+            continue
+        s_sub = src[mask]
+        rows_c = rows_by_col[ci]
+        m, length = s_sub.shape[0], rows_c.shape[0]
+        ordm = np.argsort(np.abs(rows_c[None, :] - s_sub[:, 0:1]), axis=1,
+                          kind="stable")
+        chain_rows = rows_c[ordm]                       # (m, length)
+        f_sr = np.concatenate([s_sub[:, 0:1], chain_rows[:, :-1]], axis=1)
+        f_sc = np.concatenate(
+            [s_sub[:, 1:2], np.full((m, length - 1), c, np.int64)], axis=1)
+        pos = (offsets[mask][:, None] + np.arange(length)[None, :]).ravel()
+        o_sr[pos] = f_sr.ravel()
+        o_sc[pos] = f_sc.ravel()
+        o_dr[pos] = chain_rows.ravel()
+        o_dc[pos] = c
+    return FlowBatch(np.stack([o_sr, o_sc], axis=1),
+                     np.stack([o_dr, o_dc], axis=1),
+                     np.full(total, per_src, np.float64))
 
 
 def segment_flows(placement: Placement,

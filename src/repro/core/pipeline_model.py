@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from .dataflow import Dataflow, _refetch_factors
 from .graph import Op
@@ -45,6 +45,12 @@ class SegmentCost:
     @property
     def total_energy(self) -> float:
         return self.noc_hop_energy + self.dram_energy + self.sram_energy
+
+    @property
+    def objective(self) -> "Tuple[float, float]":
+        """(latency_cycles, dram_bytes) — the planner's selection key:
+        latency first, DRAM as the tiebreak axis."""
+        return (self.latency_cycles, self.dram_bytes)
 
 
 def op_work(op: Op, hw: HWConfig) -> float:

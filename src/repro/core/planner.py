@@ -8,6 +8,16 @@ spatial organization from (depth, granularity, RF sizes), generate the
 segment's NoC traffic (incl. skip connections and unequal allocations) and
 evaluate latency/energy/DRAM via the Fig. 3 model on a chosen topology.
 
+``plan_pipeorgan`` solves each stage-1 heuristic segment with a memoized
+dynamic program over cut points — ``best(i) = min over j of cost(i, j) +
+best(j)`` with a Pareto frontier over the (latency, DRAM) objective — so
+it finds mixed-depth sub-segmentations (e.g. depth-3 followed by depth-2)
+that the original uniform-depth enumeration cannot express.  The uniform
+enumeration is kept as ``plan_pipeorgan_uniform`` (same vectorized NoC
+engine) and ``plan_pipeorgan_reference`` (pre-refactor scalar engine) for
+equivalence testing and benchmarking; the DP's selection is guarded to
+never be worse than the uniform choice on either objective axis.
+
 Baselines (Sec. V-C):
   * TANGRAM-like — fine-grained pipelining at fixed depth=2, alternating
     output-/input-stationary dataflows, blocked spatial allocation.
@@ -16,19 +26,29 @@ Baselines (Sec. V-C):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .dataflow import Dataflow, choose_dataflow
 from .depth import Segment, segment_graph
-from .graph import Graph, Op, OpKind
+from .graph import COMPLEX_KINDS, Graph, Op, OpKind
 from .granularity import Granularity, finest_granularity
 from .hwconfig import HWConfig
-from .noc import (Topology, TrafficStats, analyze, multicast_flows,
-                  pair_flows, segment_flows)
+from .noc import (FlowBatch, Topology, TrafficStats, analyze,
+                  analyze_reference, multicast_flow_batch, multicast_flows,
+                  pair_flow_batch, pair_flows)
 from .pipeline_model import SegmentCost, op_work, segment_cost
 from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
+
+#: longest sub-segment span the cut-point DP evaluates exhaustively.  Spans
+#: beyond it (a single depth-8 run, one 32-deep segment) are still
+#: considered through the uniform-depth candidates {1, 2, 4, 8, depth},
+#: which the final selection always includes; raising this widens the
+#: mixed-depth search at quadratic planning cost.
+DP_MAX_SPAN = 6
 
 
 @dataclasses.dataclass
@@ -91,10 +111,38 @@ def _segment_skip_traffic(g: Graph, seg: Segment
     return intra, crossing
 
 
+@functools.lru_cache(maxsize=1024)
+def _cached_place(org: SpatialOrg, pe_alloc: Tuple[int, ...],
+                  hw: HWConfig) -> Placement:
+    return place(org, [float(p) for p in pe_alloc], hw)
+
+
+@functools.lru_cache(maxsize=65536)
+def _pair_traffic(org: SpatialOrg, pe_alloc: Tuple[int, ...], j: int,
+                  words: float, skips: Tuple[Tuple[int, int, float], ...],
+                  hw: HWConfig, topology: Topology, fine: bool
+                  ) -> TrafficStats:
+    """One pipeline pair's traffic stats, cached across sub-segment spans.
+
+    The flows are a pure function of these arguments (the placement grid is
+    itself a pure function of (org, pe_alloc)), and the DP re-encounters
+    the same signatures constantly — overlapping spans of repeated
+    same-shape layers, re-planned topologies — so this cache collapses the
+    planner's dominant cost.
+    """
+    placement = _cached_place(org, pe_alloc, hw)
+    flow_fn = pair_flow_batch if fine else multicast_flow_batch
+    parts = [flow_fn(placement, j, j + 1, words)]
+    for s, t, w in skips:
+        parts.append(flow_fn(placement, s, t, w))
+    return analyze(FlowBatch.concat(parts), hw, topology)
+
+
 def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
                   dataflow_fn, force_org: Optional[SpatialOrg],
                   force_gb: Optional[bool],
-                  util_fn=None, traffic_scale: float = 1.0) -> SegmentPlan:
+                  util_fn=None, traffic_scale: float = 1.0,
+                  engine: str = "batch") -> SegmentPlan:
     ops = g.ops[seg.start:seg.stop]
     budget = hw.sram_bytes // max(1, seg.depth)
     dfs = [dataflow_fn(op, hw, i, budget) for i, op in enumerate(ops)]
@@ -133,14 +181,19 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     if any(not gr.pipelinable for gr in grans):
         via_gb = True  # fall back to staging through the global buffer
 
-    placement = place(org, [float(p) for p in pe_alloc], hw, via_gb)
+    if engine == "batch":
+        placement = dataclasses.replace(
+            _cached_place(org, tuple(pe_alloc), hw),
+            via_global_buffer=via_gb)
+    else:
+        placement = place(org, [float(p) for p in pe_alloc], hw, via_gb)
 
     # Blocked organizations keep flexible intra-op dataflows, so a produced
     # word is needed by many consumer PEs -> multicast chains (Figs. 8-9).
     # Fine interleavings constrain the consumer to its neighbour's output
     # -> unicast (Fig. 10).
     fine = org in (SpatialOrg.FINE_STRIPED_1D, SpatialOrg.CHECKERBOARD_2D)
-    flow_fn = pair_flows if fine else multicast_flows
+    flow_fn: Callable = pair_flows if fine else multicast_flows
 
     # Per-pair traffic analysis at burst granularity: every interval each
     # producer PE emits one word (lockstep), so pair j's burst volume is its
@@ -149,16 +202,32 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     n_bursts = [max(1, math.ceil(ops[j].output_volume()
                                  / max(1, pe_alloc[j])))
                 for j in range(len(grans))]
-    per_pair_stats = []
-    for j in range(len(grans)):
-        flows = flow_fn(placement, j, j + 1,
-                        float(pe_alloc[j]) * traffic_scale)
-        for s, t, vol in intra_skips:
-            if s <= j < t:
-                flows.extend(flow_fn(placement, s, t,
-                                     vol / max(1, n_bursts[j])))
-        per_pair_stats.append(analyze(flows, hw, topology))
-    worst = max(per_pair_stats, key=lambda st: st.worst_channel_load)
+    if via_gb and engine == "batch":
+        # coarse pipelining stages through the global buffer: the Fig. 3
+        # cost model never consults NoC stats for it, so skip the traffic
+        # analysis outright (a large share of planner time on deep spans)
+        per_pair_stats = None
+        worst = None
+    elif engine == "batch":
+        per_pair_stats = [
+            _pair_traffic(org, tuple(pe_alloc), j,
+                          float(pe_alloc[j]) * traffic_scale,
+                          tuple((s, t, vol / max(1, n_bursts[j]))
+                                for s, t, vol in intra_skips if s <= j < t),
+                          hw, topology, fine)
+            for j in range(len(grans))]
+        worst = max(per_pair_stats, key=lambda st: st.worst_channel_load)
+    else:
+        per_pair_stats = []
+        for j in range(len(grans)):
+            flows = list(flow_fn(placement, j, j + 1,
+                                 float(pe_alloc[j]) * traffic_scale))
+            for s, t, vol in intra_skips:
+                if s <= j < t:
+                    flows.extend(flow_fn(placement, s, t,
+                                         vol / max(1, n_bursts[j])))
+            per_pair_stats.append(analyze_reference(flows, hw, topology))
+        worst = max(per_pair_stats, key=lambda st: st.worst_channel_load)
 
     cost = segment_cost(ops, dfs, grans, pe_alloc, hw, per_pair_stats,
                         via_gb, ext_in, ext_out, skip_in, array_pes=usable)
@@ -167,46 +236,221 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
 
 
 # ---------------------------------------------------------------------------
-# Strategies
+# PipeOrgan: memoized cut-point DP within each heuristic segment
 # ---------------------------------------------------------------------------
+
+
+def _pipeorgan_df_fn(op: Op, hw: HWConfig, i: int, budget: int) -> Dataflow:
+    return choose_dataflow(op, hw, budget)
+
+
+#: content-addressed span plans: same-shape layer runs (repeated conv
+#: blocks, re-planned tasks) plan identically, wherever they sit in a graph.
+_SPAN_CACHE_MAX = 65536
+_span_plan_cache: "collections.OrderedDict[Tuple, SegmentPlan]" = \
+    collections.OrderedDict()
+
+
+def _span_signature(g: Graph, seg: Segment) -> Tuple:
+    """Everything ``_plan_segment`` reads from a span, by value: op shapes
+    and strides, intra-span skip pairs, and boundary-crossing skip volume."""
+    intra, crossing = _segment_skip_traffic(g, seg)
+    ops_sig = tuple((op.kind.value, tuple(sorted(op.dims.items())), op.stride)
+                    for op in g.ops[seg.start:seg.stop])
+    return (ops_sig, tuple(intra), crossing)
+
+
+def _rebind_span(plan: SegmentPlan, g: Graph, i: int, j: int) -> SegmentPlan:
+    """Re-point a cached shape-identical plan at this span's actual ops."""
+    ops = list(g.ops[i:j])
+    dfs = [dataclasses.replace(df, op_name=op.name)
+           for df, op in zip(plan.dataflows, ops)]
+    grans = [dataclasses.replace(gr, producer=ops[k].name,
+                                 consumer=ops[k + 1].name)
+             for k, gr in enumerate(plan.granularities)]
+    return dataclasses.replace(plan, segment=Segment(i, j), ops=ops,
+                               dataflows=dfs, granularities=grans)
+
+
+def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
+                     engine: str = "batch"):
+    """Memoized ``plan(i, j)`` over sub-segment cut points.
+
+    One planning run holds (g, hw, topology, df_fn) fixed, so (i, j) is a
+    complete cache key; the DP and the uniform-depth candidates share the
+    same cache, which is what makes the never-worse guard an *exact*
+    float-for-float comparison.  Underneath, plans are also cached by span
+    *content* so repeated same-shape layer runs plan once per process.
+    """
+    memo: Dict[Tuple[int, int], SegmentPlan] = {}
+    cacheable = engine == "batch" and df_fn is _pipeorgan_df_fn
+
+    def plan_ij(i: int, j: int) -> SegmentPlan:
+        key = (i, j)
+        if key in memo:
+            return memo[key]
+        seg = Segment(i, j)
+        if cacheable:
+            sig = (_span_signature(g, seg), hw, topology)
+            hit = _span_plan_cache.get(sig)
+            if hit is None:
+                plan = _plan_segment(g, seg, hw, topology, df_fn,
+                                     None, None, engine=engine)
+                _span_plan_cache[sig] = plan
+                if len(_span_plan_cache) > _SPAN_CACHE_MAX:
+                    _span_plan_cache.popitem(last=False)
+            else:
+                _span_plan_cache.move_to_end(sig)
+                plan = _rebind_span(hit, g, i, j)
+        else:
+            plan = _plan_segment(g, seg, hw, topology, df_fn,
+                                 None, None, engine=engine)
+        memo[key] = plan
+        return plan
+
+    return plan_ij
+
+
+Candidate = Tuple[float, float, Tuple[SegmentPlan, ...]]
+
+
+def _uniform_candidates(seg: Segment, plan_ij) -> List[Candidate]:
+    """The original enumeration: uniform depths {1, 2, 4, 8, seg.depth}."""
+    cands: List[Candidate] = []
+    for d in sorted({1, 2, 4, 8, seg.depth}, reverse=True):
+        if d > seg.depth:
+            continue
+        subplans: List[SegmentPlan] = []
+        i = seg.start
+        while i < seg.stop:
+            j = min(i + d, seg.stop)
+            subplans.append(plan_ij(i, j))
+            i = j
+        lat = sum(p.cost.latency_cycles for p in subplans)
+        dram = sum(p.cost.dram_bytes for p in subplans)
+        cands.append((lat, dram, tuple(subplans)))
+    return cands
+
+
+def _select(cands: Sequence[Candidate]) -> Candidate:
+    """Objective: latency first; among candidates within 25% of the best
+    latency, prefer the lowest DRAM traffic (the paper optimizes both
+    performance and energy — Fig. 13 / Fig. 14)."""
+    best_lat = min(c[0] for c in cands)
+    viable = [c for c in cands if c[0] <= 1.25 * best_lat]
+    return min(viable, key=lambda c: (c[1], c[0]))
+
+
+def _pareto(points: List[Candidate]) -> List[Candidate]:
+    """Non-dominated subset under (latency, dram), latency-sorted."""
+    points.sort(key=lambda p: (p[0], p[1]))
+    front: List[Candidate] = []
+    best_dram = math.inf
+    for p in points:
+        if p[1] < best_dram:
+            front.append(p)
+            best_dram = p[1]
+    return front
+
+
+def _dp_frontier(seg: Segment, plan_ij, max_span: int) -> List[Candidate]:
+    """Pareto frontier of all cut-point segmentations of ``seg``.
+
+    best(i) = Pareto-min over j in (i, i+max_span] of cost(i, j) + best(j),
+    solved right-to-left so each suffix is planned exactly once.
+    """
+    best: Dict[int, List[Candidate]] = {seg.stop: [(0.0, 0.0, ())]}
+    for i in range(seg.stop - 1, seg.start - 1, -1):
+        cands: List[Candidate] = []
+        for j in seg.spans_from(i, max_span):
+            p = plan_ij(i, j)
+            lat_ij, dram_ij = p.cost.objective
+            for lat, dram, rest in best[j]:
+                cands.append((lat_ij + lat, dram_ij + dram, (p,) + rest))
+        best[i] = _pareto(cands)
+    return best[seg.start]
+
+
+def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
+                          topology: Topology, df_fn,
+                          engine: str = "batch") -> List[SegmentPlan]:
+    plan_ij = _segment_planner(g, hw, topology, df_fn, engine=engine)
+    u_lat, u_dram, u_plans = _select(_uniform_candidates(seg, plan_ij))
+    if seg.depth == 1:
+        return list(u_plans)
+    frontier = _dp_frontier(seg, plan_ij,
+                            min(seg.depth, hw.max_depth, DP_MAX_SPAN))
+    # guard: the DP result must dominate (or match) the uniform enumeration
+    # on BOTH axes — strictly no-worse plans by construction
+    viable = [(l, d, p) for l, d, p in frontier
+              if l <= u_lat and d <= u_dram]
+    viable.append((u_lat, u_dram, u_plans))
+    _, _, chosen = _select(viable)
+    return list(chosen)
 
 
 def plan_pipeorgan(g: Graph, hw: HWConfig,
                    topology: Topology = Topology.AMP) -> PlanResult:
-    """Full PipeOrgan flow (Fig. 7).
+    """Full PipeOrgan flow (Fig. 7) with the cut-point DP mapper.
 
     Stage 1's footprint heuristic gives the *maximum useful* depth per
-    segment; stage 2 then evaluates candidate depths below it (deeper
-    pipelines shrink per-layer tile budgets — Sec. III-A — so the mapper
-    keeps the heuristic depth only when the evaluated cost agrees) and
-    keeps the cheapest sub-segmentation.
+    segment; stage 2 then solves for the cheapest sub-segmentation with a
+    memoized DP over cut points (deeper pipelines shrink per-layer tile
+    budgets — Sec. III-A — so the mapper keeps the heuristic depth only
+    when the evaluated cost agrees), allowing mixed depths the uniform
+    enumeration cannot express while never doing worse than it.
     """
-    segs = segment_graph(g, hw)
-    df_fn = lambda op, hw_, i, budget: choose_dataflow(op, hw_, budget)
     plans: List[SegmentPlan] = []
-    for s in segs:
-        candidates: List[Tuple[float, float, List[SegmentPlan]]] = []
+    for s in segment_graph(g, hw):
+        plans.extend(_best_subsegmentation(g, s, hw, topology,
+                                           _pipeorgan_df_fn))
+    return PlanResult(g.name, "pipeorgan", topology, plans)
+
+
+def plan_pipeorgan_uniform(g: Graph, hw: HWConfig,
+                           topology: Topology = Topology.AMP) -> PlanResult:
+    """The original uniform-depth enumeration on the vectorized engine.
+
+    Same search space and selection rule as the seed planner; used by the
+    equivalence tests as the baseline the DP must never lose to.
+    """
+    plans: List[SegmentPlan] = []
+    for s in segment_graph(g, hw):
+        plan_ij = _segment_planner(g, hw, topology, _pipeorgan_df_fn)
+        _, _, chosen = _select(_uniform_candidates(s, plan_ij))
+        plans.extend(chosen)
+    return PlanResult(g.name, "pipeorgan-uniform", topology, plans)
+
+
+def plan_pipeorgan_reference(g: Graph, hw: HWConfig,
+                             topology: Topology = Topology.AMP) -> PlanResult:
+    """Pre-refactor planner: uniform enumeration, no memoization, scalar
+    NoC walk.  Kept as the wall-clock baseline for ``planner_speed``."""
+    plans: List[SegmentPlan] = []
+    for s in segment_graph(g, hw):
+        candidates: List[Candidate] = []
         for d in sorted({1, 2, 4, 8, s.depth}, reverse=True):
             if d > s.depth:
                 continue
-            subplans = []
+            subplans: List[SegmentPlan] = []
             i = s.start
             while i < s.stop:
                 ss = Segment(i, min(i + d, s.stop))
-                subplans.append(_plan_segment(g, ss, hw, topology, df_fn,
-                                              None, None))
+                subplans.append(_plan_segment(g, ss, hw, topology,
+                                              _pipeorgan_df_fn, None, None,
+                                              engine="reference"))
                 i = ss.stop
             lat = sum(p.cost.latency_cycles for p in subplans)
             dram = sum(p.cost.dram_bytes for p in subplans)
-            candidates.append((lat, dram, subplans))
-        # objective: latency first; among candidates within 25% of the best
-        # latency, prefer the lowest DRAM traffic (the paper optimizes both
-        # performance and energy — Fig. 13 / Fig. 14)
-        best_lat = min(c[0] for c in candidates)
-        viable = [c for c in candidates if c[0] <= 1.25 * best_lat]
-        _, _, best = min(viable, key=lambda c: (c[1], c[0]))
-        plans.extend(best)
+            candidates.append((lat, dram, tuple(subplans)))
+        _, _, chosen = _select(candidates)
+        plans.extend(chosen)
     return PlanResult(g.name, "pipeorgan", topology, plans)
+
+
+# ---------------------------------------------------------------------------
+# Baseline strategies
+# ---------------------------------------------------------------------------
 
 
 def plan_tangram_like(g: Graph, hw: HWConfig,
@@ -219,7 +463,6 @@ def plan_tangram_like(g: Graph, hw: HWConfig,
         # don't pair across a complex layer and require a direct edge
         if d == 2:
             nxt = g.ops[i + 1]
-            from .graph import COMPLEX_KINDS
             direct = any(g.index(s) == i for s in nxt.inputs)
             if (nxt.kind in COMPLEX_KINDS or g.ops[i].kind in COMPLEX_KINDS
                     or not direct):
@@ -262,7 +505,6 @@ def plan_simba_like(g: Graph, hw: HWConfig,
         d = 1
         if underutilized and i + 1 < len(g.ops):
             nxt = g.ops[i + 1]
-            from .graph import COMPLEX_KINDS
             direct = any(g.index(s) == i for s in nxt.inputs)
             if nxt.kind not in COMPLEX_KINDS and direct:
                 d = 2
@@ -298,9 +540,8 @@ def plan_simba_like(g: Graph, hw: HWConfig,
 
 def plan_layer_by_layer(g: Graph, hw: HWConfig) -> PlanResult:
     segs = [Segment(i, i + 1) for i in range(len(g.ops))]
-    df_fn = lambda op, hw_, i, budget: choose_dataflow(op, hw_, budget)
-    plans = [_plan_segment(g, s, hw, Topology.MESH, df_fn, None, None)
-             for s in segs]
+    plans = [_plan_segment(g, s, hw, Topology.MESH, _pipeorgan_df_fn,
+                           None, None) for s in segs]
     return PlanResult(g.name, "layer-by-layer", Topology.MESH, plans)
 
 

@@ -1,0 +1,121 @@
+"""Planner facade: one entry point for all planning, with an LRU plan cache.
+
+Every call site — benchmarks, examples, the serving loop — plans through a
+``Planner`` instead of calling strategy functions directly.  Plans are pure
+functions of (graph, hardware, topology, strategy), so the facade caches
+``PlanResult``s under that key: repeated planning of the same workload
+(figure sweeps re-planning each task, a serving loop re-admitting the same
+model) becomes a dictionary hit, which is what makes the planner cheap
+enough to run inline rather than only offline.
+
+    >>> from repro.core import Planner, PAPER_HW, Topology
+    >>> planner = Planner(maxsize=64)
+    >>> plan = planner.plan(graph, hw=PAPER_HW, topology=Topology.AMP)
+    >>> planner.plan(graph).latency_cycles     # cache hit, no re-planning
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, Mapping, Optional, Tuple
+
+from .graph import Graph
+from .hwconfig import HWConfig, PAPER_HW
+from .noc import Topology
+from .planner import (PlanResult, plan_layer_by_layer, plan_pipeorgan,
+                      plan_pipeorgan_uniform, plan_simba_like,
+                      plan_tangram_like)
+
+CacheInfo = collections.namedtuple("CacheInfo",
+                                   ["hits", "misses", "maxsize", "currsize"])
+
+#: strategy name -> (plan function, default topology)
+_STRATEGY_TABLE = {
+    "pipeorgan": (plan_pipeorgan, Topology.AMP),
+    "pipeorgan-uniform": (plan_pipeorgan_uniform, Topology.AMP),
+    "tangram": (plan_tangram_like, Topology.MESH),
+    "simba": (plan_simba_like, Topology.MESH),
+    "layerbylayer": (None, Topology.MESH),   # takes no topology argument
+}
+
+
+def graph_fingerprint(g: Graph) -> Tuple:
+    """Stable, hashable identity of a graph's structure and shapes.
+
+    ``Graph`` is mutable (and ``Op.dims`` is a dict), so plans cannot key on
+    the object itself; the fingerprint captures everything the planner
+    reads: op names, kinds, dimension tuples, wiring and strides.
+    """
+    return (g.name, tuple(
+        (op.name, op.kind.value, tuple(sorted(op.dims.items())),
+         op.inputs, op.stride)
+        for op in g.ops))
+
+
+class Planner:
+    """LRU-cached planning facade over the strategy functions.
+
+    Thread-safe for lookups/insertions; a miss plans outside the lock, so
+    two threads racing on the same key may both plan (last insert wins) —
+    wasted work, never a wrong answer.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._cache: "collections.OrderedDict[Tuple, PlanResult]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, g: Graph, hw: HWConfig = PAPER_HW,
+             topology: Optional[Topology] = None,
+             strategy: str = "pipeorgan") -> PlanResult:
+        if strategy not in _STRATEGY_TABLE:
+            raise ValueError(f"unknown strategy {strategy!r}; "
+                             f"one of {sorted(_STRATEGY_TABLE)}")
+        fn, default_topo = _STRATEGY_TABLE[strategy]
+        topology = topology or default_topo
+        key = (graph_fingerprint(g), hw, topology, strategy)
+        with self._lock:
+            if key in self._cache:
+                self._cache.move_to_end(key)
+                self._hits += 1
+                return self._cache[key]
+            self._misses += 1
+        result = (plan_layer_by_layer(g, hw) if fn is None
+                  else fn(g, hw, topology))
+        with self._lock:
+            self._cache[key] = result
+            self._cache.move_to_end(key)
+            while len(self._cache) > self.maxsize:
+                self._cache.popitem(last=False)
+        return result
+
+    def plan_all(self, graphs: Mapping[str, Graph], hw: HWConfig = PAPER_HW,
+                 topology: Optional[Topology] = None,
+                 strategy: str = "pipeorgan") -> Dict[str, PlanResult]:
+        """Plan a workload suite (e.g. ``all_tasks()``) through the cache."""
+        return {name: self.plan(g, hw, topology, strategy)
+                for name, g in graphs.items()}
+
+    # -- cache management ----------------------------------------------------
+    def cache_info(self) -> CacheInfo:
+        with self._lock:
+            return CacheInfo(self._hits, self._misses, self.maxsize,
+                             len(self._cache))
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self._hits = 0
+            self._misses = 0
+
+
+_default_planner = Planner()
+
+
+def get_planner() -> Planner:
+    """The process-wide shared ``Planner`` (benchmarks, serving, examples)."""
+    return _default_planner

@@ -20,8 +20,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Graph, HWConfig, Topology, gemm, get_planner
 from repro.models.common import ModelConfig
 from repro.models.transformer import decode_step, init_cache
+
+
+def decode_graph(cfg: ModelConfig) -> Graph:
+    """One decode step of the transformer as an operator DAG.
+
+    Per layer: QKV projection, attention output projection, MLP up and
+    down GEMMs (M=1: a single token), then the LM head — the shapes the
+    PipeOrgan planner needs to place the decode step on an accelerator.
+    """
+    hd = cfg.hd
+    ops = []
+    prev = None
+
+    def g_(name: str, n: int, k: int) -> None:
+        nonlocal prev
+        ops.append(gemm(name, 1, n, k,
+                        inputs=(prev,) if prev is not None else ()))
+        prev = name
+
+    for layer in range(cfg.n_layers):
+        g_(f"l{layer}.qkv", hd * (cfg.n_heads + 2 * cfg.n_kv_heads),
+           cfg.d_model)
+        g_(f"l{layer}.attn_out", cfg.d_model, cfg.n_heads * hd)
+        g_(f"l{layer}.mlp_up", cfg.d_ff, cfg.d_model)
+        g_(f"l{layer}.mlp_down", cfg.d_model, cfg.d_ff)
+    g_("lm_head", cfg.vocab, cfg.d_model)
+    return Graph(f"{cfg.name}-decode", ops)
 
 
 @dataclasses.dataclass
@@ -39,7 +67,8 @@ class ServeEngine:
     """Continuous-batching engine over a fixed slot pool."""
 
     def __init__(self, params, cfg: ModelConfig, batch_slots: int,
-                 max_len: int):
+                 max_len: int, plan_hw: Optional[HWConfig] = None,
+                 plan_topology: Topology = Topology.AMP):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
@@ -52,6 +81,14 @@ class ServeEngine:
         self.remaining_prompt: List[List[int]] = [[] for _ in range(batch_slots)]
         self.generated = np.zeros(batch_slots, np.int32)
         self._step = jax.jit(self._device_step)
+        self.ticks = 0
+        # optional accelerator plan for this model's decode step: planned
+        # through the shared facade, so identical engines (same config and
+        # target) hit the LRU plan cache instead of re-planning
+        self.plan = None
+        if plan_hw is not None:
+            self.plan = get_planner().plan(decode_graph(cfg), hw=plan_hw,
+                                           topology=plan_topology)
 
     # -- device program ------------------------------------------------------
     def _device_step(self, params, cache, tokens, index):
@@ -77,6 +114,7 @@ class ServeEngine:
         still prefilling, else the model's own last sample); returns any
         requests completed this tick."""
         self._refill()
+        self.ticks += 1
         feed = np.zeros((self.B, 1), np.int32)
         live = np.zeros(self.B, bool)
         for slot, req in enumerate(self.active):
@@ -124,3 +162,17 @@ class ServeEngine:
             done.extend(self.step())
             ticks += 1
         return done
+
+    def stats(self) -> Dict[str, float]:
+        """Engine + (when planned) accelerator-model serving estimates."""
+        out: Dict[str, float] = {
+            "ticks": float(self.ticks),
+            "queued": float(len(self.queue)),
+            "active": float(sum(r is not None for r in self.active)),
+        }
+        if self.plan is not None:
+            cyc = self.plan.latency_cycles
+            out["planned_cycles_per_token"] = cyc
+            out["planned_dram_bytes_per_token"] = self.plan.dram_bytes
+            out["planned_cycles_total"] = cyc * self.ticks
+        return out

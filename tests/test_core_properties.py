@@ -1,0 +1,61 @@
+"""Hypothesis property tests for the core algorithms.
+
+Kept in their own module behind ``pytest.importorskip`` so the tier-1
+suite still collects and runs on minimal installs without hypothesis.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import PAPER_HW  # noqa: E402
+from repro.core.dataflow import choose_dataflow  # noqa: E402
+from repro.core.depth import segment_graph  # noqa: E402
+from repro.core.granularity import finest_granularity  # noqa: E402
+from repro.core.graph import chain, conv  # noqa: E402
+from repro.core.noc import Topology as T, route  # noqa: E402
+from repro.core.spatial import allocate_pes  # noqa: E402
+
+HW = PAPER_HW
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_segments_partition_graph(h, c, n):
+    """Segments exactly tile [0, len(ops)) in order, depth <= sqrt(PEs)."""
+    g = chain("p", [conv(f"c{i}", 1, h, h, c, c, r=3) for i in range(n)])
+    segs = segment_graph(g, HW)
+    assert segs[0].start == 0 and segs[-1].stop == n
+    for a, b in zip(segs, segs[1:]):
+        assert a.stop == b.start
+    assert all(1 <= s.depth <= HW.max_depth for s in segs)
+
+
+@given(st.integers(8, 128), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=30, deadline=None)
+def test_granularity_bounded_by_tensor(h, cin, cout):
+    p = conv("p", 1, h, h, cin, cout, r=3)
+    c = conv("c", 1, h, h, cout, cin, r=3, inputs=("p",))
+    gr = finest_granularity(p, choose_dataflow(p, HW), c,
+                            choose_dataflow(c, HW))
+    assert 1 <= gr.elements <= p.output_volume()
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=16),
+       st.sampled_from([64, 256, 1024]))
+@settings(max_examples=50, deadline=None)
+def test_allocate_pes_exact_and_positive(ratios, num):
+    alloc = allocate_pes(ratios, num)
+    assert sum(alloc) == num
+    assert all(a >= 1 for a in alloc)
+
+
+@given(st.integers(1, 31), st.integers(1, 31))
+@settings(max_examples=30, deadline=None)
+def test_route_reaches_destination(r, c):
+    for topo in (T.MESH, T.AMP, T.TORUS, T.FLATTENED_BUTTERFLY):
+        links = route((0, 0), (r, c), 32, 32, topo, HW.amp_link_len)
+        assert links[-1][1] == (r, c)
+        # path is connected
+        for a, b in zip(links, links[1:]):
+            assert a[1] == b[0]

@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.store import (AsyncCheckpointer, latest_step,
                                     read_metadata, restore, save)
@@ -138,8 +137,7 @@ def test_adamw_descends_quadratic():
     assert float(jnp.abs(params["w"]).max()) < 1.0
 
 
-@given(st.floats(0.1, 10.0))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("scale", [0.1, 0.7, 1.0, 3.3, 10.0])
 def test_adamw_clips_gradients(scale):
     cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=1)
     params = {"w": jnp.zeros((4,))}
