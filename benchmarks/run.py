@@ -45,6 +45,11 @@ def _derived(name: str, rows) -> str:
             return f"configs={len(rows)}"
         if name == "fig06_skips":
             return f"max_skips={max(r['n_skips'] for r in rows)}"
+        if name == "simulator_validation":
+            tot = [r for r in rows if r.get("task") == "ALL"][0]
+            return (f"within_band={tot['within_band']};"
+                    f"mismatched_verdicts={tot['mismatched_verdicts']}"
+                    f"/{tot['n_segments']}")
         if name == "planner_speed":
             tot = [r for r in rows if r.get("task") == "TOTAL"][0]
             return f"dp_speedup_vs_reference={tot['speedup']}"

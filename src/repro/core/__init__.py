@@ -12,7 +12,9 @@ Stage 2 — HW mapping and NoC architecture:
                   (vectorized `analyze` + scalar `analyze_reference`)
   pipeline_model.py  Fig. 3 interval latency + energy model
   planner.py      memoized cut-point DP flow + TANGRAM/SIMBA baselines
-  planner_service.py  `Planner` facade with an LRU plan cache
+  planner_service.py  `Planner` facade with an LRU plan cache + `validate`
+  simulator.py    event-driven pipeline simulator — the differential-
+                  testing oracle for the analytical model above
 """
 from .dataflow import Dataflow, choose_dataflow, best_case_arithmetic_intensity
 from .depth import Segment, segment_depths, segment_graph
@@ -28,6 +30,9 @@ from .planner import (PlanResult, SegmentPlan, STRATEGIES, plan_layer_by_layer,
                       plan_pipeorgan_uniform, plan_simba_like,
                       plan_tangram_like)
 from .planner_service import CacheInfo, Planner, get_planner, graph_fingerprint
+from .simulator import (LATENCY_BAND, LATENCY_BAND_UNCONGESTED, SimReport,
+                        SegmentSimReport, SegmentValidation, ValidationReport,
+                        simulate_plan, simulate_segment, validate_plan)
 from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
 
 __all__ = [
@@ -44,5 +49,8 @@ __all__ = [
     "plan_pipeorgan", "plan_pipeorgan_reference", "plan_pipeorgan_uniform",
     "plan_simba_like", "plan_tangram_like",
     "CacheInfo", "Planner", "get_planner", "graph_fingerprint",
+    "LATENCY_BAND", "LATENCY_BAND_UNCONGESTED", "SimReport",
+    "SegmentSimReport", "SegmentValidation", "ValidationReport",
+    "simulate_plan", "simulate_segment", "validate_plan",
     "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org", "place",
 ]

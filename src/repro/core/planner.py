@@ -62,6 +62,14 @@ class SegmentPlan:
     placement: Optional[Placement]
     noc: Optional[TrafficStats]
     cost: SegmentCost
+    # replay metadata: everything the event-driven simulator needs to
+    # re-execute this plan without the original Graph (slot-relative skip
+    # edges in elements, boundary-crossing skip bytes, the baseline's
+    # per-interval traffic multiplier, and the usable substrate size).
+    intra_skips: Tuple[Tuple[int, int, int], ...] = ()
+    skip_in_bytes: float = 0.0
+    traffic_scale: float = 1.0
+    array_pes: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -167,7 +175,10 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
         cost = segment_cost(ops, dfs, grans, pe_alloc, hw, None, True,
                             ext_in, ext_out, skip_in, array_pes=usable)
         return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc,
-                           None, None, None, cost)
+                           None, None, None, cost,
+                           intra_skips=tuple(intra_skips),
+                           skip_in_bytes=skip_in,
+                           traffic_scale=traffic_scale, array_pes=usable)
 
     # organization choice
     gran_bytes = max(gr.elements for gr in grans) * hw.bytes_per_word
@@ -232,7 +243,10 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     cost = segment_cost(ops, dfs, grans, pe_alloc, hw, per_pair_stats,
                         via_gb, ext_in, ext_out, skip_in, array_pes=usable)
     return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc, org,
-                       placement, worst, cost)
+                       placement, worst, cost,
+                       intra_skips=tuple(intra_skips),
+                       skip_in_bytes=skip_in,
+                       traffic_scale=traffic_scale, array_pes=usable)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from .noc import Topology
 from .planner import (PlanResult, plan_layer_by_layer, plan_pipeorgan,
                       plan_pipeorgan_uniform, plan_simba_like,
                       plan_tangram_like)
+from .simulator import (DEFAULT_MAX_BURSTS, ValidationReport, validate_plan)
 
 CacheInfo = collections.namedtuple("CacheInfo",
                                    ["hits", "misses", "maxsize", "currsize"])
@@ -99,6 +100,25 @@ class Planner:
         """Plan a workload suite (e.g. ``all_tasks()``) through the cache."""
         return {name: self.plan(g, hw, topology, strategy)
                 for name, g in graphs.items()}
+
+    # -- differential validation ---------------------------------------------
+    def validate(self, plan_or_graph, hw: HWConfig = PAPER_HW,
+                 topology: Optional[Topology] = None,
+                 strategy: str = "pipeorgan",
+                 max_bursts: int = DEFAULT_MAX_BURSTS) -> ValidationReport:
+        """Differential-test a plan against the event-driven simulator.
+
+        Accepts either a ``PlanResult`` (simulated as-is) or a ``Graph``
+        (planned through the cache first, so a validated plan and a served
+        plan are the same object).  The report carries the declared
+        error-band contract (``simulator.LATENCY_BAND``) plus per-segment
+        analytical-vs-simulated latency, link-load and congestion verdicts.
+        """
+        if isinstance(plan_or_graph, PlanResult):
+            plan = plan_or_graph
+        else:
+            plan = self.plan(plan_or_graph, hw, topology, strategy)
+        return validate_plan(plan, hw, max_bursts=max_bursts)
 
     # -- cache management ----------------------------------------------------
     def cache_info(self) -> CacheInfo:

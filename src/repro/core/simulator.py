@@ -1,0 +1,506 @@
+"""Discrete-event pipeline simulator: a differential-testing oracle for the
+analytical planner.
+
+The planner's ``SegmentCost`` comes from closed-form interval equations
+(``pipeline_model.segment_cost`` + ``noc.analyze``).  This module *executes*
+a ``SegmentPlan`` instead: every pipeline pair's bursts are emitted on a
+timeline, every flow of every burst is walked link-by-link over the same
+``route()`` paths through per-link FIFO queues (including the 4-port
+ingress arbitration at each consumer PE), global-buffer placements stage
+their bursts through a shared GB port server, and the consumer drains the
+pipeline burst by burst.  Nothing is read from ``TrafficStats`` or
+``SegmentCost`` — link loads, queueing, fill and drain all emerge from the
+event timeline — so a bug in the analytical model shows up as a divergence
+here rather than steering every plan silently.
+
+Execution model (per segment of depth D, pairs j = 0..D-2):
+
+  * pair j moves ``n_j = ceil(outvol_j / pes_j)`` bursts; each burst is one
+    word per producer PE in lockstep (the paper's Sec. IV-C burst model).
+  * slot j's per-burst service time is ``max(t_prod, t_cons_down,
+    t_cons_up * n_{j-1}/n_j)`` — it cannot outrun its own reduction, its
+    consumer's absorb rate (credit backpressure: at most one granularity
+    chunk in flight), or its input arrival rate.
+  * burst b of pair j may not be emitted before the upstream bursts it
+    consumes have *arrived* (and, for b = 0, before a full Alg. 1
+    granularity chunk has landed — pipeline fill).
+  * transport is cut-through: a flow's head advances one link per cycle,
+    each link serves 1 word/cycle FIFO, and the final hop arbitrates over
+    the destination PE's 4 ingress ports in flow order.
+  * the last slot absorbs bursts sequentially at its consume rate; the
+    simulated segment latency is its last finish.  DRAM streaming is
+    threaded through the run as a per-burst share (``mem_stall / n_j`` on
+    pair j's service — the same distribution the analytical deltas use).
+
+Fidelity limits (see docs/simulator.md): pairs contend on their own link
+FIFOs (the analytical model is also per-pair), steady state beyond
+``max_bursts`` simulated bursts per pair is extrapolated at the measured
+tail rate, and DRAM bytes reuse ``weight_dram_traffic`` (the differential
+surface is latency, link loads and congestion — not the byte accounting).
+
+The declared error-band contract lives in ``LATENCY_BAND`` /
+``LATENCY_BAND_UNCONGESTED``: analytical latency divided by simulated
+latency must fall inside the band on every segment.  The differential
+sweep (tests/test_simulator_differential.py) enforces it across all four
+topologies x all four spatial organizations x depths {1, 2, 4, 8}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .hwconfig import HWConfig, PAPER_HW
+from .noc import (FlowBatch, Topology, multicast_flow_batch, pair_flow_batch,
+                  route)
+from .pipeline_model import op_compute_cycles, op_work, weight_dram_traffic
+from .planner import PlanResult, SegmentPlan
+from .spatial import SpatialOrg
+
+#: analytical/simulated latency ratio contract, all segments.  Measured
+#: over every XR-bench task x {pipeorgan, tangram, simba}: congested
+#: segments land in [1.13, 2.58] (the paper's Fig. 15 backlog rule is
+#: deliberately pessimistic vs. a store-and-forward timeline, up to ~2.6x),
+#: uncongested segments in [0.67, 1.48] (fill accounting + GB port
+#: serialization the analytical model does not charge).
+LATENCY_BAND = (0.55, 3.00)
+
+#: tighter contract when neither model flags congestion: the only
+#: divergences left are the fill term and transport/GB serialization.
+LATENCY_BAND_UNCONGESTED = (0.60, 1.70)
+
+#: global-buffer port bandwidth, words/cycle (one word per column lane).
+_GB_WORDS_PER_CYCLE_FACTOR = 1.0
+
+#: default number of bursts simulated per pair before extrapolating the
+#: steady state at the measured tail rate.
+DEFAULT_MAX_BURSTS = 64
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentSimReport:
+    """Measured execution of one ``SegmentPlan`` — field-for-field
+    comparable with the analytical ``SegmentCost`` / ``TrafficStats``."""
+    latency_cycles: float            # <-> SegmentCost.latency_cycles
+    dram_bytes: float                # <-> SegmentCost.dram_bytes
+    congested: bool                  # <-> SegmentCost.congested
+    peak_link_load: float            # <-> TrafficStats.worst_channel_load
+    hop_words_per_burst: float       # <-> TrafficStats.total_hop_words
+    total_link_words: float          # words moved over the whole run
+    pair_intervals: List[float]      # measured steady emission spacing
+    pair_peak_loads: List[float]     # per-pair worst link words/burst
+    pair_congested: List[bool]
+    n_bursts: List[int]
+    simulated_bursts: List[int]      # bursts actually event-simulated
+    link_loads: Dict[object, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Whole-plan simulation: per-segment reports plus plan-level totals
+    mirroring ``PlanResult.latency_cycles`` / ``.dram_bytes``."""
+    strategy: str
+    topology: Topology
+    segments: List[SegmentSimReport]
+
+    @property
+    def latency_cycles(self) -> float:
+        return sum(s.latency_cycles for s in self.segments)
+
+    @property
+    def dram_bytes(self) -> float:
+        return sum(s.dram_bytes for s in self.segments)
+
+    @property
+    def congested(self) -> bool:
+        return any(s.congested for s in self.segments)
+
+    @property
+    def peak_link_load(self) -> float:
+        return max((s.peak_link_load for s in self.segments), default=0.0)
+
+
+# ---------------------------------------------------------------------------
+# flow/path preparation
+# ---------------------------------------------------------------------------
+
+
+def _pair_flow_batch(plan: SegmentPlan, j: int) -> FlowBatch:
+    """The exact flow set the planner analyzed for pair j, regenerated from
+    the plan's replay metadata (placement, skips, traffic scale)."""
+    fine = plan.org in (SpatialOrg.FINE_STRIPED_1D, SpatialOrg.CHECKERBOARD_2D)
+    flow_fn = pair_flow_batch if fine else multicast_flow_batch
+    words = float(plan.pe_alloc[j]) * plan.traffic_scale
+    n_j = max(1, math.ceil(plan.ops[j].output_volume()
+                           / max(1, plan.pe_alloc[j])))
+    parts = [flow_fn(plan.placement, j, j + 1, words)]
+    for s, t, vol in plan.intra_skips:
+        if s <= j < t:
+            parts.append(flow_fn(plan.placement, s, t, vol / n_j))
+    return FlowBatch.concat(parts)
+
+
+def _burst_paths(fb: FlowBatch, hw: HWConfig, topology: Topology):
+    """Expand a pair's flow batch into per-flow link-key paths.
+
+    Returns (paths, words, link_loads, hop_words): ``paths[i]`` is the
+    FIFO-key sequence flow i traverses — ``route()`` links, with the final
+    hop replaced by the destination PE's ingress-port key assigned
+    round-robin in flow order (the same adaptive last-hop arbitration the
+    analytical engines model, re-derived independently here).
+    """
+    rows, cols = hw.pe_rows, hw.pe_cols
+    express = hw.amp_link_len if topology == Topology.AMP else 1
+    ingress: Dict[Tuple[int, int], int] = defaultdict(int)
+    loads: Dict[object, float] = defaultdict(float)
+    paths: List[Tuple[object, ...]] = []
+    words: List[float] = []
+    hop_words = 0.0
+    for s, d, w in zip(fb.src, fb.dst, fb.words):
+        src = (int(s[0]), int(s[1]))
+        dst = (int(d[0]), int(d[1]))
+        w = float(w)
+        if w <= 0 or src == dst:
+            continue
+        links: List[object] = list(route(src, dst, rows, cols, topology,
+                                         express))
+        port = ingress[dst] % 4
+        ingress[dst] += 1
+        hop_words += w * len(links)
+        links[-1] = (dst, "in", port)
+        for key in links:
+            loads[key] += w
+        paths.append(tuple(links))
+        words.append(w)
+    return paths, words, dict(loads), hop_words
+
+
+def _transport_burst(paths: Sequence[Tuple[object, ...]],
+                     words: Sequence[float],
+                     link_free: Dict[object, float], t0: float) -> float:
+    """Inject one burst at time ``t0``; returns when its last word lands.
+
+    Cut-through switching over per-link FIFO servers at 1 word/cycle: a
+    flow's head advances to the next link one cycle after it wins the
+    current one; its tail occupies each link for ``words`` cycles.
+    """
+    t_done = t0
+    for path, w in zip(paths, words):
+        t_head = t0
+        finish = t0
+        for key in path:
+            start = link_free.get(key, 0.0)
+            if start < t_head:
+                start = t_head
+            finish = start + w
+            link_free[key] = finish
+            t_head = start + 1.0
+        if finish > t_done:
+            t_done = finish
+    return t_done
+
+
+class _Timeline:
+    """Arrival times of a pair's bursts: simulated prefix + steady-state
+    extrapolation at the measured tail rate."""
+
+    def __init__(self, times: List[float], spacing: float):
+        self.times = times
+        self.spacing = spacing
+
+    def at(self, i: int) -> float:
+        if i < 0:
+            return 0.0
+        if i < len(self.times):
+            return self.times[i]
+        return self.times[-1] + (i - len(self.times) + 1) * self.spacing
+
+
+def _tail_rate(times: List[float], fallback: float) -> float:
+    if len(times) < 2:
+        return fallback
+    k = max(1, len(times) // 2)
+    rate = (times[-1] - times[k - 1]) / (len(times) - k)
+    return max(rate, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# segment execution
+# ---------------------------------------------------------------------------
+
+
+def simulate_segment(plan: SegmentPlan, hw: HWConfig, topology: Topology,
+                     max_bursts: int = DEFAULT_MAX_BURSTS
+                     ) -> SegmentSimReport:
+    """Execute one segment plan end-to-end on the event timeline."""
+    ops = plan.ops
+    D = len(ops)
+    pe_alloc = plan.pe_alloc
+
+    ext_in = ops[0].input_volume() * hw.bytes_per_word
+    ext_out = ops[-1].output_volume() * hw.bytes_per_word
+    dram = (ext_in + ext_out + plan.skip_in_bytes
+            + weight_dram_traffic(ops, plan.dataflows, hw, pe_alloc))
+    mem_stall = dram / hw.dram_bw_bytes_per_cycle
+
+    if D == 1:
+        comp = op_compute_cycles(ops[0], plan.array_pes or hw.num_pes, hw)
+        return SegmentSimReport(
+            latency_cycles=comp + mem_stall, dram_bytes=dram,
+            congested=False, peak_link_load=0.0, hop_words_per_burst=0.0,
+            total_link_words=0.0, pair_intervals=[], pair_peak_loads=[],
+            pair_congested=[], n_bursts=[], simulated_bursts=[])
+
+    via_gb = bool(plan.placement.via_global_buffer)
+    gb_bw = max(1.0, hw.pe_cols * _GB_WORDS_PER_CYCLE_FACTOR)
+
+    # per-pair rates, burst counts and fill requirements
+    n_bursts: List[int] = []
+    t_prod: List[float] = []
+    t_cons: List[float] = []
+    fill: List[int] = []
+    for j in range(D - 1):
+        outv = max(1, ops[j].output_volume())
+        n_src = max(1, pe_alloc[j])
+        n_dst = max(1, pe_alloc[j + 1])
+        n_j = max(1, math.ceil(outv / n_src))
+        n_bursts.append(n_j)
+        t_prod.append(op_work(ops[j], hw) / outv / hw.dot_product_size)
+        inv = max(1, ops[j + 1].input_volume())
+        t_cons.append(n_src * op_work(ops[j + 1], hw) / inv
+                      / (n_dst * hw.dot_product_size))
+        fill.append(min(n_j, max(1, math.ceil(plan.granularities[j].elements
+                                              / n_src))))
+
+    # a slot's per-burst service: its own reduction, the consumer's absorb
+    # rate (credit backpressure), its absorb share of the upstream pair,
+    # plus its share of the segment's DRAM streaming (weights/boundary
+    # tensors stream *during* the run, mem_stall/n_j per burst — the same
+    # distribution the analytical deltas use)
+    base_service: List[float] = []
+    service: List[float] = []
+    for j in range(D - 1):
+        s = max(t_prod[j], t_cons[j])
+        if j > 0:
+            s = max(s, t_cons[j - 1] * n_bursts[j - 1] / n_bursts[j])
+        base_service.append(s)
+        service.append(s + mem_stall / n_bursts[j])
+
+    timelines: List[_Timeline] = []
+    arr_rates: List[float] = []
+    emit_spacing: List[float] = []
+    pair_peaks: List[float] = []
+    pair_congested: List[bool] = []
+    simulated: List[int] = []
+    hop_words_worst = 0.0
+    total_link_words = 0.0
+    peak_overall = 0.0
+    worst_loads: Dict[object, float] = {}
+
+    for j in range(D - 1):
+        n_j = n_bursts[j]
+        sim_n = min(n_j, max(2, max_bursts))
+        simulated.append(sim_n)
+
+        if via_gb:
+            paths: List[Tuple[object, ...]] = []
+            words: List[float] = []
+            loads: Dict[object, float] = {}
+            hop_words = 0.0
+            burst_words = float(pe_alloc[j]) * plan.traffic_scale + sum(
+                vol / n_j for s, t, vol in plan.intra_skips if s <= j < t)
+            gb_occ = burst_words / gb_bw
+        else:
+            fb = _pair_flow_batch(plan, j)
+            paths, words, loads, hop_words = _burst_paths(fb, hw, topology)
+            gb_occ = 0.0
+
+        peak = max(loads.values()) if loads else 0.0
+        pair_peaks.append(peak)
+        total_link_words += hop_words * n_j
+        if peak >= peak_overall:
+            peak_overall = peak
+            hop_words_worst = hop_words
+            worst_loads = loads
+
+        link_free: Dict[object, float] = {}
+        gb_free = 0.0
+        emits: List[float] = []
+        arrivals: List[float] = []
+        t_prev = 0.0
+        for b in range(sim_n):
+            ready = 0.0
+            if j > 0:
+                need = math.ceil((b + 1) * n_bursts[j - 1] / n_j)
+                if b == 0:
+                    need = max(need, fill[j - 1])
+                need = min(need, n_bursts[j - 1])
+                ready = timelines[j - 1].at(need - 1)
+            t = max(t_prev, ready) + service[j]
+            emits.append(t)
+            t_prev = t
+            if via_gb:
+                start = max(t, gb_free)
+                gb_free = start + gb_occ
+                arrivals.append(start + 2.0 * gb_occ)
+            else:
+                arrivals.append(_transport_burst(paths, words, link_free, t))
+
+        # Sustainable steady rates: the measured tail can still sit in a
+        # fill-induced catch-up transient (burst 0 late, later bursts
+        # re-spaced at raw service rate), so the extrapolation floor is the
+        # rate-chained bound: a pair cannot outrun its own service, its
+        # upstream arrival rate (burst-ratio converted), or — for arrivals —
+        # the serialization of its burst through the hottest link / GB port.
+        up_rate = (arr_rates[j - 1] * n_bursts[j - 1] / n_j) if j > 0 else 0.0
+        steady_emit = max(service[j], up_rate)
+        emit_spacing.append(max(_tail_rate(emits, service[j]), steady_emit))
+        steady_arr = max(steady_emit, gb_occ if via_gb else peak)
+        arr_rates.append(max(_tail_rate(arrivals, steady_arr), steady_arr))
+        timelines.append(_Timeline(arrivals, arr_rates[-1]))
+        # congestion is a NoC verdict: the steady burst cannot drain through
+        # the hottest link within the emission interval.  The pair's own
+        # DRAM share is excluded (the analytical verdict also compares the
+        # load against the stall-free compute interval).
+        verdict_interval = max(steady_emit - mem_stall / n_j,
+                               base_service[j])
+        pair_congested.append((not via_gb)
+                              and peak > verdict_interval * (1.0 + 1e-9))
+
+    # ---- drain: the last slot absorbs pair D-2 burst by burst ---------------
+    jl = D - 2
+    n_last = n_bursts[jl]
+    tl = timelines[jl]
+    tc_last = max(t_cons[jl], 1e-12)
+    sim_abs = min(n_last, max(2, max_bursts))
+    done = tl.at(min(fill[jl], n_last) - 1)     # wait for the first chunk
+    for b in range(sim_abs):
+        done = max(done, tl.at(b)) + tc_last
+    if n_last > sim_abs:
+        done += (n_last - sim_abs) * max(tl.spacing, tc_last)
+
+    # DRAM time is already threaded through the per-burst services above;
+    # the drain's finish time therefore IS the segment latency.
+    return SegmentSimReport(
+        latency_cycles=done,
+        dram_bytes=dram,
+        congested=any(pair_congested),
+        peak_link_load=peak_overall,
+        hop_words_per_burst=hop_words_worst,
+        total_link_words=total_link_words,
+        pair_intervals=emit_spacing,
+        pair_peak_loads=pair_peaks,
+        pair_congested=pair_congested,
+        n_bursts=n_bursts,
+        simulated_bursts=simulated,
+        link_loads=worst_loads)
+
+
+def simulate_plan(plan: PlanResult, hw: HWConfig = PAPER_HW,
+                  max_bursts: int = DEFAULT_MAX_BURSTS) -> SimReport:
+    """Execute every segment of a ``PlanResult`` on its plan topology."""
+    return SimReport(plan.strategy, plan.topology,
+                     [simulate_segment(s, hw, plan.topology, max_bursts)
+                      for s in plan.segments])
+
+
+# ---------------------------------------------------------------------------
+# differential validation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentValidation:
+    """One segment's analytical-vs-simulated comparison."""
+    start: int
+    stop: int
+    analytical_latency: float
+    simulated_latency: float
+    analytical_congested: bool
+    simulated_congested: bool
+    analytical_peak_load: float
+    simulated_peak_load: float
+
+    @property
+    def ratio(self) -> float:
+        return self.analytical_latency / max(self.simulated_latency, 1e-12)
+
+    @property
+    def verdict_agrees(self) -> bool:
+        return self.analytical_congested == self.simulated_congested
+
+    def within(self, band: Tuple[float, float]) -> bool:
+        return band[0] <= self.ratio <= band[1]
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    """Plan-level differential report with the declared band contract."""
+    strategy: str
+    topology: Topology
+    band: Tuple[float, float]
+    segments: List[SegmentValidation]
+
+    @property
+    def latency_within_band(self) -> bool:
+        return all(s.within(self.band) for s in self.segments)
+
+    @property
+    def verdicts_agree(self) -> bool:
+        return all(s.verdict_agrees for s in self.segments)
+
+    @property
+    def ok(self) -> bool:
+        return self.latency_within_band and self.verdicts_agree
+
+    @property
+    def max_ratio(self) -> float:
+        return max((s.ratio for s in self.segments), default=1.0)
+
+    @property
+    def min_ratio(self) -> float:
+        return min((s.ratio for s in self.segments), default=1.0)
+
+    def summary(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "topology": self.topology.value,
+            "n_segments": len(self.segments),
+            "min_ratio": round(self.min_ratio, 3),
+            "max_ratio": round(self.max_ratio, 3),
+            "band": list(self.band),
+            "latency_within_band": self.latency_within_band,
+            "verdicts_agree": self.verdicts_agree,
+            "ok": self.ok,
+        }
+
+
+def validate_plan(plan: PlanResult, hw: HWConfig = PAPER_HW,
+                  max_bursts: int = DEFAULT_MAX_BURSTS,
+                  band: Optional[Tuple[float, float]] = None
+                  ) -> ValidationReport:
+    """Differential-test a plan: simulate it and compare segment by segment.
+
+    ``band`` defaults to ``LATENCY_BAND`` — the repo-wide contract the
+    differential sweep enforces.
+    """
+    band = band or LATENCY_BAND
+    rows: List[SegmentValidation] = []
+    for seg in plan.segments:
+        sim = simulate_segment(seg, hw, plan.topology, max_bursts)
+        rows.append(SegmentValidation(
+            start=seg.segment.start, stop=seg.segment.stop,
+            analytical_latency=seg.cost.latency_cycles,
+            simulated_latency=sim.latency_cycles,
+            analytical_congested=seg.cost.congested,
+            simulated_congested=sim.congested,
+            analytical_peak_load=(seg.noc.worst_channel_load
+                                  if seg.noc is not None else 0.0),
+            simulated_peak_load=sim.peak_link_load))
+    return ValidationReport(plan.strategy, plan.topology, band, rows)

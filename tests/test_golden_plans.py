@@ -1,0 +1,86 @@
+"""Golden-snapshot regression for the full XR-bench planning flow.
+
+``tests/golden/xrbench_plans.json`` pins, for every XR-bench task, the
+pipeorgan@AMP plan's segmentation (cut points and depths), the chosen
+spatial organization and GB-staging decision per segment, the congestion
+verdict, and the analytical latency/DRAM numbers.  Any change to the depth
+heuristic, granularity walk, spatial-organization rule, NoC model, cost
+model or DP selection that shifts a plan shows up here as a readable diff.
+
+Regenerate deliberately (after verifying the change is intended) with:
+
+    PYTHONPATH=src python -c "import tests.test_golden_plans as t; t.regenerate()"
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs.xrbench import all_tasks
+from repro.core import PAPER_HW, Topology
+from repro.core.planner import plan_pipeorgan
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "xrbench_plans.json"
+
+#: structural fields must match exactly; float costs within this rtol
+#: (cross-platform numpy reduction-order jitter, nothing more).
+FLOAT_RTOL = 1e-6
+
+
+def _snapshot_plan(plan) -> dict:
+    return {
+        "topology": plan.topology.value,
+        "latency_cycles": plan.latency_cycles,
+        "dram_bytes": plan.dram_bytes,
+        "segments": [
+            {
+                "start": s.segment.start,
+                "stop": s.segment.stop,
+                "depth": s.segment.depth,
+                "org": s.org.value if s.org is not None else None,
+                "via_global_buffer": (bool(s.placement.via_global_buffer)
+                                      if s.placement is not None else None),
+                "latency_cycles": s.cost.latency_cycles,
+                "dram_bytes": s.cost.dram_bytes,
+                "congested": s.cost.congested,
+            }
+            for s in plan.segments
+        ],
+    }
+
+
+def regenerate() -> None:
+    golden = {name: _snapshot_plan(plan_pipeorgan(g, PAPER_HW, Topology.AMP))
+              for name, g in all_tasks().items()}
+    GOLDEN_PATH.write_text(json.dumps(golden, indent=1, sort_keys=True)
+                           + "\n")
+
+
+def _golden() -> dict:
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+def test_golden_file_covers_all_tasks():
+    assert sorted(_golden()) == sorted(all_tasks())
+
+
+@pytest.mark.parametrize("task", sorted(all_tasks()))
+def test_plan_matches_golden_snapshot(task):
+    want = _golden()[task]
+    got = _snapshot_plan(plan_pipeorgan(all_tasks()[task], PAPER_HW,
+                                        Topology.AMP))
+    assert got["topology"] == want["topology"]
+    assert len(got["segments"]) == len(want["segments"]), (
+        f"{task}: segmentation changed "
+        f"({len(want['segments'])} -> {len(got['segments'])} segments)")
+    for i, (gs, ws) in enumerate(zip(got["segments"], want["segments"])):
+        ctx = f"{task} segment {i} [{ws['start']},{ws['stop']})"
+        for key in ("start", "stop", "depth", "org", "via_global_buffer",
+                    "congested"):
+            assert gs[key] == ws[key], (
+                f"{ctx}: {key} changed {ws[key]!r} -> {gs[key]!r}")
+        for key in ("latency_cycles", "dram_bytes"):
+            assert gs[key] == pytest.approx(ws[key], rel=FLOAT_RTOL), (
+                f"{ctx}: {key} drifted {ws[key]} -> {gs[key]}")
+    for key in ("latency_cycles", "dram_bytes"):
+        assert got[key] == pytest.approx(want[key], rel=FLOAT_RTOL)

@@ -1,0 +1,141 @@
+"""Fig. 4 legality + Alg. 1 corner coverage for ``core/granularity.py``.
+
+Exercises every exit path of ``finest_granularity``: the three illegality
+conditions (producer contracted rank outermost, consumer unshared rank
+outermost, no matching outermost loop), the tile-size-mismatch LCM
+correction, the rank-mismatch (conv -> flattened GEMM) fallback, and the
+streaming producer/consumer shortcuts.
+"""
+import dataclasses as dc
+
+from repro.core import PAPER_HW
+from repro.core.dataflow import choose_dataflow
+from repro.core.granularity import finest_granularity
+from repro.core.graph import add, concat, conv, gemm
+
+HW = PAPER_HW
+
+
+def _conv_pair():
+    p = conv("p", 1, 32, 32, 16, 16, r=3)
+    c = conv("c", 1, 32, 32, 16, 16, r=3, inputs=("p",))
+    return p, choose_dataflow(p, HW), c, choose_dataflow(c, HW)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 illegality conditions
+# ---------------------------------------------------------------------------
+
+
+def test_producer_contracted_rank_outermost_blocks():
+    p, dfp, c, dfc = _conv_pair()
+    for outer in ("C", "R", "S"):
+        rest = tuple(r for r in dfp.loop_order if r != outer)
+        bad = dc.replace(dfp, loop_order=(outer,) + rest)
+        gr = finest_granularity(p, bad, c, dfc)
+        assert not gr.pipelinable
+        assert gr.reason == "producer contracted rank outermost"
+        # an illegal pair degrades to whole-tensor hand-off
+        assert gr.elements == p.output_volume()
+        assert gr.fused_ranks == ()
+
+
+def test_consumer_unshared_rank_outermost_blocks():
+    p, dfp, c, dfc = _conv_pair()
+    # the consumer's K is produced by *it*, not shared with the producer
+    bad = dc.replace(dfc, loop_order=("K", "N", "H", "W", "C", "R", "S"))
+    gr = finest_granularity(p, dfp, c, bad)
+    assert not gr.pipelinable
+    assert gr.reason == "consumer unshared rank outermost"
+    assert gr.elements == p.output_volume()
+
+
+def test_weight_stationary_gemm_chain_is_not_pipelinable():
+    """Weight-heavy GEMMs pick N-outermost (B-stationary) loop orders;
+    N is unshared on the consumer side, so Fig. 4 forbids pipelining —
+    the legality rule must catch the planner's own dataflow choice."""
+    g1 = gemm("g1", 8, 2048, 2048)
+    g2 = gemm("g2", 8, 2048, 2048, inputs=("g1",))
+    d1, d2 = choose_dataflow(g1, HW), choose_dataflow(g2, HW)
+    assert d1.loop_order[0] == "N"            # weight stationary
+    gr = finest_granularity(g1, d1, g2, d2)
+    assert not gr.pipelinable
+    assert gr.reason == "consumer unshared rank outermost"
+
+
+def test_no_matching_outermost_loop_blocks():
+    p, dfp, c, dfc = _conv_pair()
+    a = dc.replace(dfp, loop_order=("H", "N", "W", "K", "C", "R", "S"))
+    b = dc.replace(dfc, loop_order=("W", "N", "H", "C", "R", "S", "K"))
+    gr = finest_granularity(p, a, c, b)
+    assert not gr.pipelinable
+    assert gr.reason == "outermost loops do not match"
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 fusion walk
+# ---------------------------------------------------------------------------
+
+
+def test_tile_size_mismatch_takes_lcm_correction():
+    """Sec. III-C: a matching rank with different tile sizes still fuses,
+    but synchronization coarsens to LCM(tile_p, tile_c) of that rank."""
+    p, dfp, c, dfc = _conv_pair()
+    a = dc.replace(dfp, loop_order=("N", "H", "W", "K", "C", "R", "S"),
+                   tiles={**dfp.tiles, "N": 1, "H": 4})
+    b = dc.replace(dfc, loop_order=("N", "H", "W", "C", "R", "S", "K"),
+                   tiles={**dfc.tiles, "N": 1, "H": 6})
+    gr = finest_granularity(p, a, c, b)
+    assert gr.pipelinable
+    assert gr.fused_ranks == ("N", "H")       # fusion stops at the mismatch
+    # granularity below (N, H) is W*K, coarsened by lcm(4, 6)/min(4, 6) = 3
+    assert gr.elements == 32 * 16 * 3
+
+
+def test_equal_tiles_fuse_without_penalty():
+    p, dfp, c, dfc = _conv_pair()
+    a = dc.replace(dfp, loop_order=("N", "H", "W", "K", "C", "R", "S"),
+                   tiles={**dfp.tiles, "N": 1, "H": 4})
+    b = dc.replace(dfc, loop_order=("N", "H", "W", "C", "R", "S", "K"),
+                   tiles={**dfc.tiles, "N": 1, "H": 4})
+    gr = finest_granularity(p, a, c, b)
+    assert gr.pipelinable
+    assert "H" in gr.fused_ranks
+    # no LCM coarsening: granularity is exactly the sub-H working set
+    assert gr.elements <= 32 * 16 * 32        # at most W*K*W remainder
+
+
+def test_rank_mismatch_falls_back_to_batch_correspondence():
+    """conv -> flattened GEMM: only the batch rank corresponds, so the
+    fused prefix is (N,) and the granularity is the whole feature map."""
+    p, dfp, _, _ = _conv_pair()
+    fc = gemm("fc", 1 * 32 * 32, 64, 16)
+    gr = finest_granularity(p, dfp, fc, choose_dataflow(fc, HW))
+    assert gr.pipelinable
+    assert gr.fused_ranks == ("N",)
+    assert gr.elements == p.output_volume()
+
+
+# ---------------------------------------------------------------------------
+# streaming shortcuts
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_consumer_uses_producer_emission_burst():
+    p, dfp, _, _ = _conv_pair()
+    a = add("a", 1, 32, 32, 16, inputs=("p",))
+    gr = finest_granularity(p, dfp, a, choose_dataflow(a, HW))
+    assert gr.pipelinable
+    assert gr.reason == "streaming consumer"
+    # innermost output rank of the producer's loop order (W = 32)
+    assert gr.elements == 32
+
+
+def test_streaming_producer_uses_consumer_chunk():
+    cc = concat("cc", 1, 32, 32, 32)
+    c2 = conv("c2", 1, 32, 32, 32, 16, r=3, inputs=("cc",))
+    gr = finest_granularity(cc, choose_dataflow(cc, HW),
+                            c2, choose_dataflow(c2, HW))
+    assert gr.pipelinable
+    assert gr.reason == "streaming producer"
+    assert 1 <= gr.elements <= cc.output_volume()

@@ -1,0 +1,137 @@
+"""NoC engine edge cases: empty flow sets and degenerate (1xN / Nx1) grids.
+
+The vectorized ``analyze`` and the scalar ``analyze_reference`` must agree
+on the corners the planner rarely exercises: zero flows, all-dropped flows
+(zero words / self loops), single-row and single-column substrates (where
+torus wrap, AMP express links and flattened-butterfly row hops all
+degenerate), and the 1x1 grid with no links at all.
+"""
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.core import PAPER_HW
+from repro.core.noc import (Flow, FlowBatch, Topology, analyze,
+                            analyze_reference, topology_link_count)
+
+ALL_TOPOLOGIES = list(Topology)
+
+ROW_HW = dc.replace(PAPER_HW, pe_rows=1, pe_cols=16)    # 1xN
+COL_HW = dc.replace(PAPER_HW, pe_rows=16, pe_cols=1)    # Nx1
+DOT_HW = dc.replace(PAPER_HW, pe_rows=1, pe_cols=1)     # single PE
+
+
+def _assert_stats_equal(a, b):
+    assert a.worst_channel_load == b.worst_channel_load
+    assert a.max_path_hops == b.max_path_hops
+    assert a.num_links_used == b.num_links_used
+    assert a.link_count == b.link_count
+    np.testing.assert_allclose(a.total_hop_words, b.total_hop_words,
+                               rtol=1e-12)
+    np.testing.assert_allclose(a.total_wire_words, b.total_wire_words,
+                               rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# zero-flow corners
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("hw", [PAPER_HW, ROW_HW, COL_HW, DOT_HW],
+                         ids=["32x32", "1x16", "16x1", "1x1"])
+def test_empty_flow_batch_matches_reference(topology, hw):
+    st = analyze(FlowBatch.empty(), hw, topology)
+    ref = analyze_reference([], hw, topology)
+    _assert_stats_equal(st, ref)
+    assert st.worst_channel_load == 0.0
+    assert st.num_links_used == 0
+    assert st.max_path_hops == 0
+    # an empty interval is never congested and costs no hop energy
+    assert not st.congested(1.0)
+    assert st.interval_comm_delay(7.0) == 7.0
+    assert st.hop_energy(hw) == 0.0
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+def test_all_dropped_flows_match_reference(topology):
+    """Zero-word flows and self-loops are dropped by both engines."""
+    flows = [Flow((0, 0), (3, 4), 0.0),       # zero words
+             Flow((2, 2), (2, 2), 5.0),       # self loop
+             Flow((1, 1), (1, 1), 0.0)]
+    st = analyze(flows, PAPER_HW, topology)
+    ref = analyze_reference(flows, PAPER_HW, topology)
+    _assert_stats_equal(st, ref)
+    assert st.worst_channel_load == 0.0
+    assert st.total_hop_words == 0.0
+
+
+# ---------------------------------------------------------------------------
+# degenerate grids
+# ---------------------------------------------------------------------------
+
+
+def _random_flows(rng, n, rows, cols):
+    src_r = rng.integers(0, rows, n)
+    src_c = rng.integers(0, cols, n)
+    dst_r = rng.integers(0, rows, n)
+    dst_c = rng.integers(0, cols, n)
+    words = rng.uniform(0.0, 5.0, n)
+    words[rng.random(n) < 0.1] = 0.0
+    return [Flow((int(a), int(b)), (int(c), int(d)), float(w))
+            for a, b, c, d, w in zip(src_r, src_c, dst_r, dst_c, words)]
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("hw", [ROW_HW, COL_HW], ids=["1x16", "16x1"])
+def test_skinny_grids_match_reference(topology, hw):
+    rng = np.random.default_rng(7)
+    for n in (1, 2, 33, 400):
+        flows = _random_flows(rng, n, hw.pe_rows, hw.pe_cols)
+        _assert_stats_equal(analyze(flows, hw, topology),
+                            analyze_reference(flows, hw, topology))
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+def test_single_pe_grid_has_no_traffic(topology):
+    """On a 1x1 substrate every flow is a self-loop."""
+    flows = [Flow((0, 0), (0, 0), 9.0)]
+    st = analyze(flows, DOT_HW, topology)
+    _assert_stats_equal(st, analyze_reference(flows, DOT_HW, topology))
+    assert st.worst_channel_load == 0.0
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+def test_skinny_grid_end_to_end_flow(topology):
+    """A full-span flow on a 1xN row: hop counts follow the topology
+    (express links shorten AMP, wrap shortens nothing on a full span,
+    flattened butterfly is a single row hop)."""
+    hw = ROW_HW
+    flows = [Flow((0, 0), (0, hw.pe_cols - 1), 2.0)]
+    st = analyze(flows, hw, topology)
+    _assert_stats_equal(st, analyze_reference(flows, hw, topology))
+    assert st.total_hop_words == 2.0 * st.max_path_hops
+    if topology == Topology.FLATTENED_BUTTERFLY:
+        assert st.max_path_hops == 1
+    elif topology == Topology.TORUS:
+        assert st.max_path_hops == 1          # wrap link closes the ring
+    elif topology == Topology.AMP:
+        assert st.max_path_hops < hw.pe_cols - 1
+    else:
+        assert st.max_path_hops == hw.pe_cols - 1
+
+
+@pytest.mark.parametrize("hw", [ROW_HW, COL_HW], ids=["1x16", "16x1"])
+def test_skinny_link_counts_are_consistent(hw):
+    """Link budgets on degenerate grids stay ordered mesh <= amp and the
+    1-D flattened butterfly is the all-to-all row/column clique."""
+    n = max(hw.pe_rows, hw.pe_cols)
+    mesh = topology_link_count(hw.pe_rows, hw.pe_cols, Topology.MESH, 1)
+    amp = topology_link_count(hw.pe_rows, hw.pe_cols, Topology.AMP,
+                              hw.amp_link_len)
+    fb = topology_link_count(hw.pe_rows, hw.pe_cols,
+                             Topology.FLATTENED_BUTTERFLY, 1)
+    assert mesh == n - 1
+    assert mesh <= amp < 2 * mesh + n
+    assert fb == n * (n - 1) // 2

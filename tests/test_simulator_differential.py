@@ -1,0 +1,215 @@
+"""Differential harness: the event-driven simulator vs. the analytical model.
+
+Sweeps every ``Topology`` x every ``SpatialOrg`` x depths {1, 2, 4, 8} on a
+small substrate, asserting the declared error-band contract
+(``simulator.LATENCY_BAND``) between analytical and simulated latency, exact
+agreement of the congestion verdicts, and bit-level agreement of the
+simulator's independently-accumulated per-link peak load with the
+analytical ``TrafficStats``.  This is the regression gate every future
+change to ``pipeline_model`` / ``noc`` / ``planner`` must keep green.
+"""
+import math
+
+import pytest
+
+from repro.core import (LATENCY_BAND, LATENCY_BAND_UNCONGESTED, PAPER_HW,
+                        Planner, Topology, plan_pipeorgan, simulate_plan,
+                        simulate_segment, validate_plan)
+from repro.core.depth import Segment
+from repro.core.graph import Graph, add, chain, conv
+from repro.core.hwconfig import HWConfig
+from repro.core.planner import _pipeorgan_df_fn, _plan_segment
+from repro.core.spatial import SpatialOrg
+
+#: small substrate so the event simulation stays cheap; sized to admit all
+#: four organizations at depth 8 (8 rows => one stripe per slot).
+SIM_HW = HWConfig(name="sim-test", pe_rows=8, pe_cols=8, sram_bytes=1 << 16,
+                  rf_bytes_per_pe=256, dram_bw_bytes_per_cycle=64.0)
+
+ALL_TOPOLOGIES = list(Topology)
+ALL_ORGS = list(SpatialOrg)
+DEPTHS = (1, 2, 4, 8)
+
+
+def _sweep_chain(depth: int) -> Graph:
+    return chain("sweep", [conv(f"c{i}", 1, 16, 16, 8, 8, r=3)
+                           for i in range(depth)])
+
+
+def _forced_plan(g: Graph, depth: int, topology: Topology,
+                 org: SpatialOrg, via_gb: bool = False):
+    return _plan_segment(g, Segment(0, depth), SIM_HW, topology,
+                         _pipeorgan_df_fn, org if depth > 1 else None,
+                         via_gb)
+
+
+# ---------------------------------------------------------------------------
+# the sweep: 4 topologies x 4 organizations x depths {1, 2, 4, 8}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("org", ALL_ORGS)
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_differential_sweep(topology, org, depth):
+    plan = _forced_plan(_sweep_chain(depth), depth, topology, org)
+    sim = simulate_segment(plan, SIM_HW, topology, max_bursts=48)
+
+    # latency within the declared error band
+    ratio = plan.cost.latency_cycles / sim.latency_cycles
+    lo, hi = LATENCY_BAND
+    assert lo <= ratio <= hi, (
+        f"analytical/simulated latency {ratio:.3f} outside [{lo}, {hi}] "
+        f"({plan.cost.latency_cycles:.1f} vs {sim.latency_cycles:.1f})")
+
+    # congestion verdicts agree on every configuration
+    assert plan.cost.congested == sim.congested, (
+        f"verdict mismatch: analytical={plan.cost.congested} "
+        f"simulated={sim.congested} (peak {sim.peak_link_load:.2f}, "
+        f"intervals {sim.pair_intervals})")
+
+    # uncongested configurations obey the tighter band
+    if not plan.cost.congested:
+        lo_u, hi_u = LATENCY_BAND_UNCONGESTED
+        assert lo_u <= ratio <= hi_u
+
+    # the byte accounting must agree exactly
+    assert sim.dram_bytes == pytest.approx(plan.cost.dram_bytes, rel=1e-12)
+
+    # the simulator's own route walk + port arbitration must reproduce the
+    # analytical engine's worst channel load bit-for-bit
+    if depth > 1 and plan.noc is not None:
+        assert sim.peak_link_load == pytest.approx(
+            plan.noc.worst_channel_load, rel=1e-9)
+        assert sim.hop_words_per_burst == pytest.approx(
+            plan.noc.total_hop_words, rel=1e-9)
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+def test_differential_via_global_buffer(topology):
+    """Coarse (GB-staged) pipelining: no NoC flows, still within band."""
+    plan = _forced_plan(_sweep_chain(4), 4, topology,
+                        SpatialOrg.BLOCKED_2D, via_gb=True)
+    assert plan.placement.via_global_buffer
+    sim = simulate_segment(plan, SIM_HW, topology, max_bursts=48)
+    lo, hi = LATENCY_BAND
+    assert lo <= plan.cost.latency_cycles / sim.latency_cycles <= hi
+    assert sim.peak_link_load == 0.0          # nothing entered the NoC
+    assert not sim.congested and not plan.cost.congested
+
+
+@pytest.mark.parametrize("org", [SpatialOrg.BLOCKED_1D,
+                                 SpatialOrg.FINE_STRIPED_1D])
+def test_differential_with_skip_connection(org):
+    """Skip flows ride the same links; loads and verdicts still agree."""
+    ops = [conv("a", 1, 16, 16, 8, 8, r=3),
+           conv("b", 1, 16, 16, 8, 8, r=3, inputs=("a",)),
+           conv("c", 1, 16, 16, 8, 8, r=3, inputs=("b",)),
+           add("d", 1, 16, 16, 8, inputs=("c", "a"))]
+    g = Graph("skipseg", ops)
+    plan = _plan_segment(g, Segment(0, 4), SIM_HW, Topology.MESH,
+                         _pipeorgan_df_fn, org, False)
+    assert plan.intra_skips, "segment must carry its skip metadata"
+    sim = simulate_segment(plan, SIM_HW, Topology.MESH, max_bursts=48)
+    assert sim.peak_link_load == pytest.approx(
+        plan.noc.worst_channel_load, rel=1e-9)
+    assert plan.cost.congested == sim.congested
+    lo, hi = LATENCY_BAND
+    assert lo <= plan.cost.latency_cycles / sim.latency_cycles <= hi
+
+
+# ---------------------------------------------------------------------------
+# simulator self-consistency
+# ---------------------------------------------------------------------------
+
+
+def test_extrapolation_matches_full_simulation():
+    """Capping bursts + steady-state extrapolation tracks the full run."""
+    for depth, org in ((2, SpatialOrg.FINE_STRIPED_1D),
+                       (4, SpatialOrg.BLOCKED_1D)):
+        plan = _forced_plan(_sweep_chain(depth), depth, Topology.MESH, org)
+        full = simulate_segment(plan, SIM_HW, Topology.MESH,
+                                max_bursts=10 ** 6)
+        capped = simulate_segment(plan, SIM_HW, Topology.MESH, max_bursts=8)
+        assert all(n <= 8 for n in capped.simulated_bursts)
+        assert capped.latency_cycles == pytest.approx(
+            full.latency_cycles, rel=0.05)
+        assert capped.congested == full.congested
+
+
+def test_simulator_is_deterministic():
+    plan = _forced_plan(_sweep_chain(4), 4, Topology.AMP,
+                        SpatialOrg.CHECKERBOARD_2D)
+    a = simulate_segment(plan, SIM_HW, Topology.AMP, max_bursts=32)
+    b = simulate_segment(plan, SIM_HW, Topology.AMP, max_bursts=32)
+    assert a.latency_cycles == b.latency_cycles
+    assert a.link_loads == b.link_loads
+
+
+def test_depth1_simulation_matches_analytical_exactly():
+    plan = _forced_plan(_sweep_chain(1), 1, Topology.MESH,
+                        SpatialOrg.BLOCKED_1D)
+    sim = simulate_segment(plan, SIM_HW, Topology.MESH)
+    assert sim.latency_cycles == pytest.approx(plan.cost.latency_cycles)
+    assert sim.dram_bytes == pytest.approx(plan.cost.dram_bytes)
+    assert not sim.congested
+
+
+# ---------------------------------------------------------------------------
+# whole-plan validation through the facade
+# ---------------------------------------------------------------------------
+
+
+def test_validate_plan_end_to_end():
+    g = chain("e2e", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
+                      for i in range(6)])
+    plan = plan_pipeorgan(g, SIM_HW, Topology.AMP)
+    report = validate_plan(plan, SIM_HW, max_bursts=32)
+    assert len(report.segments) == len(plan.segments)
+    assert report.latency_within_band, report.summary()
+    assert report.verdicts_agree, report.summary()
+    assert report.ok
+    s = report.summary()
+    assert s["band"] == list(LATENCY_BAND)
+    assert s["n_segments"] == len(plan.segments)
+
+
+def test_planner_facade_validate():
+    """`Planner.validate` accepts a graph (plans through the cache) or a
+    ready plan, and both paths validate the same object."""
+    planner = Planner(maxsize=8)
+    g = chain("facade", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
+                         for i in range(4)])
+    rep_from_graph = planner.validate(g, SIM_HW, Topology.MESH,
+                                      max_bursts=16)
+    plan = planner.plan(g, SIM_HW, Topology.MESH)
+    rep_from_plan = planner.validate(plan, SIM_HW, max_bursts=16)
+    assert planner.cache_info().hits >= 1     # graph path reused the cache
+    assert [s.simulated_latency for s in rep_from_graph.segments] == \
+        [s.simulated_latency for s in rep_from_plan.segments]
+    assert rep_from_graph.ok and rep_from_plan.ok
+
+
+def test_simulate_plan_aggregates_segments():
+    g = chain("agg", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
+                      for i in range(6)])
+    plan = plan_pipeorgan(g, SIM_HW, Topology.MESH)
+    sim = simulate_plan(plan, SIM_HW, max_bursts=16)
+    assert len(sim.segments) == len(plan.segments)
+    assert sim.latency_cycles == pytest.approx(
+        sum(s.latency_cycles for s in sim.segments))
+    assert sim.dram_bytes == pytest.approx(
+        sum(s.dram_bytes for s in sim.segments))
+    assert sim.peak_link_load == max(s.peak_link_load for s in sim.segments)
+
+
+def test_validate_real_task_on_paper_hw():
+    """One real XR-bench workload through the full contract on the 32x32
+    paper substrate (the rest are covered by the benchmark figure)."""
+    from repro.configs.xrbench import all_tasks
+
+    g = all_tasks()["keyword_spotting"]
+    plan = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+    report = validate_plan(plan, PAPER_HW, max_bursts=16)
+    assert report.latency_within_band, report.summary()
+    assert report.verdicts_agree, report.summary()
