@@ -53,6 +53,10 @@ def _derived(name: str, rows) -> str:
         if name == "planner_speed":
             tot = [r for r in rows if r.get("task") == "TOTAL"][0]
             return f"dp_speedup_vs_reference={tot['speedup']}"
+        if name == "sim_speed":
+            tot = [r for r in rows if r.get("topology") == "ALL"][0]
+            return (f"geomean_speedup_depth8={tot['geomean_speedup_depth8']};"
+                    f"min_depth8={tot['min_speedup_depth8']}")
         if name == "amp_ablation":
             amp = [r for r in rows if r["topology"] == "amp"
                    and r["strategy"] == "tangram-like"][0]
@@ -92,8 +96,13 @@ def main() -> int:
         print(f"{name},{us:.0f},{_derived(name, rows)}")
 
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "summary.json").write_text(json.dumps(summary, indent=1,
-                                                     default=str))
+    out = RESULTS / "summary.json"
+    if args.only and out.exists():
+        # a --only run refreshes its own entry without dropping the rest
+        merged = json.loads(out.read_text())
+        merged.update(summary)
+        summary = merged
+    out.write_text(json.dumps(summary, indent=1, default=str))
     if failed:
         print(f"\n{len(failed)} benchmarks failed", file=sys.stderr)
         return 1

@@ -267,7 +267,7 @@ def simulator_validation() -> List[dict]:
     rows = []
     for name, g in all_tasks().items():
         plan = _plan(g, "pipeorgan", Topology.AMP)
-        rep = _PLANNER.validate(plan, PAPER_HW, max_bursts=32)
+        rep = _PLANNER.validate(plan, PAPER_HW)
         # the simulator is deterministic, so the report's per-segment
         # simulated latencies sum to the whole-plan simulated latency
         sim_latency = sum(s.simulated_latency for s in rep.segments)
@@ -289,6 +289,74 @@ def simulator_validation() -> List[dict]:
         "mismatched_verdicts": sum(r["mismatched_verdicts"] for r in rows),
         "n_segments": sum(r["n_segments"] for r in rows),
     })
+    return rows
+
+
+def sim_speed() -> List[dict]:
+    """Max-plus simulator vs the scalar reference loop, per topology x
+    depth: the PR-3 tentpole.  Segments are the deepest forced spans of an
+    XR-bench-shaped conv chain on the paper substrate plus the deepest
+    planner-chosen XR-bench segments; the target is >=5x on depth-8
+    segments at the default burst budget (DEFAULT_MAX_BURSTS)."""
+    from repro.core import (DEFAULT_MAX_BURSTS, sim_cache_clear,
+                            simulate_reference, simulate_segment)
+    from repro.core.depth import Segment
+    from repro.core.graph import chain, conv
+    from repro.core.planner import _pipeorgan_df_fn, _plan_segment
+    from repro.core.spatial import SpatialOrg
+
+    def _time(fn, reps=3):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    rows = []
+    speedups_d8 = []
+    for topology in (Topology.MESH, Topology.AMP, Topology.TORUS,
+                     Topology.FLATTENED_BUTTERFLY):
+        for depth in (2, 4, 8):
+            g = chain(f"simbench-d{depth}",
+                      [conv(f"c{i}", 1, 32, 32, 16, 16, r=3)
+                       for i in range(depth)])
+            org = (SpatialOrg.CHECKERBOARD_2D if depth >= 4
+                   else SpatialOrg.FINE_STRIPED_1D)
+            plan = _plan_segment(g, Segment(0, depth), PAPER_HW, topology,
+                                 _pipeorgan_df_fn, org, False)
+
+            def run_vec():
+                sim_cache_clear()     # cold: path expansion + replays paid
+                return simulate_segment(plan, PAPER_HW, topology,
+                                        max_bursts=DEFAULT_MAX_BURSTS)
+            t_vec, sim_v = _time(run_vec)
+            t_warm, _ = _time(lambda: simulate_segment(
+                plan, PAPER_HW, topology, max_bursts=DEFAULT_MAX_BURSTS))
+            t_ref, sim_r = _time(lambda: simulate_reference(
+                plan, PAPER_HW, topology, max_bursts=DEFAULT_MAX_BURSTS),
+                reps=1)
+            rel = abs(sim_v.latency_cycles - sim_r.latency_cycles) \
+                / max(sim_r.latency_cycles, 1e-12)
+            speedup = t_ref / t_vec
+            if depth == 8:
+                speedups_d8.append(speedup)
+            rows.append({
+                "topology": topology.value, "depth": depth,
+                "org": org.value,
+                "vectorized_ms": round(t_vec * 1e3, 3),
+                "vectorized_warm_ms": round(t_warm * 1e3, 3),
+                "reference_ms": round(t_ref * 1e3, 3),
+                "speedup": round(speedup, 2),
+                "warm_speedup": round(t_ref / max(t_warm, 1e-9), 2),
+                "latency_rel_err": rel,
+                "link_loads_equal": sim_v.link_loads == sim_r.link_loads,
+            })
+    gm = lambda xs: math.exp(sum(math.log(x) for x in xs) / len(xs))
+    rows.append({"topology": "ALL", "depth": 8,
+                 "geomean_speedup_depth8": round(gm(speedups_d8), 2),
+                 "min_speedup_depth8": round(min(speedups_d8), 2),
+                 "target": 5.0})
     return rows
 
 
@@ -343,4 +411,5 @@ FIGURES = {
     "amp_ablation": amp_ablation,
     "simulator_validation": simulator_validation,
     "planner_speed": planner_speed,
+    "sim_speed": sim_speed,
 }

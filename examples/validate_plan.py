@@ -34,3 +34,8 @@ print(f"\nwithin band: {report.latency_within_band}   "
 if not report.ok:
     print("NOTE: marginal congestion verdicts can flip where the analytical "
           "producer-side stall chaining is conservative (docs/simulator.md).")
+
+print("\ncache statistics (hits/misses/size) after plan + validate:")
+for name, ci in planner.cache_info_all().items():
+    print(f"  {name:>12s}: {ci.hits:6d} hits  {ci.misses:6d} misses  "
+          f"{ci.currsize:5d}/{ci.maxsize} entries")

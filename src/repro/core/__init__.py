@@ -22,17 +22,20 @@ from .granularity import Granularity, finest_granularity
 from .graph import Graph, Op, OpKind, add, chain, concat, conv, dwconv, gemm
 from .hwconfig import HWConfig, PAPER_HW, TPU_V5E
 from .noc import (Flow, FlowBatch, Topology, TrafficStats, analyze,
-                  analyze_reference, multicast_flow_batch, pair_flow_batch,
-                  segment_flows)
+                  analyze_reference, cached_flow_batch, flow_batch_cache_clear,
+                  flow_batch_cache_info, multicast_flow_batch,
+                  pair_flow_batch, segment_flows)
 from .pipeline_model import SegmentCost, segment_cost
 from .planner import (PlanResult, SegmentPlan, STRATEGIES, plan_layer_by_layer,
                       plan_pipeorgan, plan_pipeorgan_reference,
                       plan_pipeorgan_uniform, plan_simba_like,
                       plan_tangram_like)
 from .planner_service import CacheInfo, Planner, get_planner, graph_fingerprint
-from .simulator import (LATENCY_BAND, LATENCY_BAND_UNCONGESTED, SimReport,
-                        SegmentSimReport, SegmentValidation, ValidationReport,
-                        simulate_plan, simulate_segment, validate_plan)
+from .simulator import (DEFAULT_MAX_BURSTS, LATENCY_BAND,
+                        LATENCY_BAND_UNCONGESTED, SimReport, SegmentSimReport,
+                        SegmentValidation, ValidationReport, sim_cache_clear,
+                        sim_cache_info, simulate_plan, simulate_reference,
+                        simulate_segment, validate_plan)
 from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
 
 __all__ = [
@@ -42,15 +45,17 @@ __all__ = [
     "Graph", "Op", "OpKind", "add", "chain", "concat", "conv", "dwconv",
     "gemm", "HWConfig", "PAPER_HW", "TPU_V5E",
     "Flow", "FlowBatch", "Topology", "TrafficStats", "analyze",
-    "analyze_reference", "multicast_flow_batch", "pair_flow_batch",
+    "analyze_reference", "cached_flow_batch", "flow_batch_cache_clear",
+    "flow_batch_cache_info", "multicast_flow_batch", "pair_flow_batch",
     "segment_flows",
     "SegmentCost", "segment_cost",
     "PlanResult", "SegmentPlan", "STRATEGIES", "plan_layer_by_layer",
     "plan_pipeorgan", "plan_pipeorgan_reference", "plan_pipeorgan_uniform",
     "plan_simba_like", "plan_tangram_like",
     "CacheInfo", "Planner", "get_planner", "graph_fingerprint",
-    "LATENCY_BAND", "LATENCY_BAND_UNCONGESTED", "SimReport",
-    "SegmentSimReport", "SegmentValidation", "ValidationReport",
-    "simulate_plan", "simulate_segment", "validate_plan",
+    "DEFAULT_MAX_BURSTS", "LATENCY_BAND", "LATENCY_BAND_UNCONGESTED",
+    "SimReport", "SegmentSimReport", "SegmentValidation", "ValidationReport",
+    "sim_cache_clear", "sim_cache_info", "simulate_plan",
+    "simulate_reference", "simulate_segment", "validate_plan",
     "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org", "place",
 ]

@@ -18,8 +18,10 @@ Two engines compute the same statistics:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
+import threading
 from collections import defaultdict
 from typing import Dict, Iterable, List, Sequence, Tuple
 
@@ -516,6 +518,112 @@ def multicast_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
     return FlowBatch(np.stack([o_sr, o_sc], axis=1),
                      np.stack([o_dr, o_dc], axis=1),
                      np.full(total, per_src, np.float64))
+
+
+# ---------------------------------------------------------------------------
+# Cross-component flow-batch cache
+# ---------------------------------------------------------------------------
+#
+# The planner's cut-point DP, the event simulator and ``Planner.validate``
+# all re-derive the *same* pair flow sets: a pair's flows are a pure
+# function of (placement grid, src slot, dst slot, words, fine/multicast).
+# ``cached_flow_batch`` memoizes them once per process so the three
+# engines stop paying the generation cost (the shared hot allocation
+# between planner.py and simulator.py).  Callers must treat the returned
+# ``FlowBatch`` as immutable.
+
+
+class LRUCache:
+    """Minimal ordered-dict LRU with hit/miss statistics.
+
+    Not a decorator (unlike ``functools.lru_cache``) so callers can key on
+    derived signatures — e.g. a placement grid's bytes — instead of the
+    raw arguments, and so the stats are inspectable by name from
+    ``Planner.cache_info``.  Thread-safe like the facade's plan cache: a
+    racing miss may generate the value twice (last insert wins), never a
+    wrong answer.
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            try:
+                val = self._data[key]
+            except KeyError:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key, val) -> None:
+        with self._lock:
+            self._data[key] = val
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def info(self) -> Tuple[int, int, int, int]:
+        """(hits, misses, maxsize, currsize)."""
+        with self._lock:
+            return (self.hits, self.misses, self.maxsize, len(self._data))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+_FLOW_BATCH_CACHE = LRUCache(maxsize=8192)
+
+
+def placement_key(placement: Placement) -> Tuple:
+    """Hashable identity of a placement's flow-relevant content.
+
+    The grid bytes subsume (org, pe_alloc, substrate shape): two
+    placements with identical slot grids generate identical flows whatever
+    produced them.  ``via_global_buffer`` is deliberately excluded — it
+    gates *whether* flows enter the NoC, not what they are.
+    """
+    return (placement.org.value, placement.grid.shape,
+            placement.grid.tobytes())
+
+
+def cached_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
+                      words_per_interval: float, fine: bool) -> FlowBatch:
+    """Memoized ``pair_flow_batch`` / ``multicast_flow_batch``.
+
+    Exact-key caching (words included verbatim, no unit-scaling) so a hit
+    is bit-identical to a regeneration — the differential parity contracts
+    downstream rely on that.
+    """
+    key = (placement_key(placement), src_slot, dst_slot,
+           float(words_per_interval), bool(fine))
+    fb = _FLOW_BATCH_CACHE.get(key)
+    if fb is None:
+        gen = pair_flow_batch if fine else multicast_flow_batch
+        fb = gen(placement, src_slot, dst_slot, words_per_interval)
+        _FLOW_BATCH_CACHE.put(key, fb)
+    return fb
+
+
+def flow_batch_cache_info() -> Tuple[int, int, int, int]:
+    return _FLOW_BATCH_CACHE.info()
+
+
+def flow_batch_cache_clear() -> None:
+    _FLOW_BATCH_CACHE.clear()
 
 
 def segment_flows(placement: Placement,

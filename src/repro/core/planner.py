@@ -38,17 +38,20 @@ from .graph import COMPLEX_KINDS, Graph, Op, OpKind
 from .granularity import Granularity, finest_granularity
 from .hwconfig import HWConfig
 from .noc import (FlowBatch, Topology, TrafficStats, analyze,
-                  analyze_reference, multicast_flow_batch, multicast_flows,
-                  pair_flow_batch, pair_flows)
+                  analyze_reference, cached_flow_batch, multicast_flows,
+                  pair_flows)
 from .pipeline_model import SegmentCost, op_work, segment_cost
 from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
 
 #: longest sub-segment span the cut-point DP evaluates exhaustively.  Spans
-#: beyond it (a single depth-8 run, one 32-deep segment) are still
-#: considered through the uniform-depth candidates {1, 2, 4, 8, depth},
-#: which the final selection always includes; raising this widens the
-#: mixed-depth search at quadratic planning cost.
-DP_MAX_SPAN = 6
+#: beyond it (one 32-deep segment) are still considered through the
+#: uniform-depth candidates {1, 2, 4, 8, depth}, which the final selection
+#: always includes; raising this widens the mixed-depth search at
+#: quadratic planning cost.  Raised 6 -> 8 once the cross-segment
+#: flow-batch cache amortized cut-point evaluation (PR 3): depth-8
+#: sub-segments — the deepest uniform candidate — are now searched
+#: exhaustively in mixed-depth combinations too.
+DP_MAX_SPAN = 8
 
 
 @dataclasses.dataclass
@@ -139,10 +142,9 @@ def _pair_traffic(org: SpatialOrg, pe_alloc: Tuple[int, ...], j: int,
     planner's dominant cost.
     """
     placement = _cached_place(org, pe_alloc, hw)
-    flow_fn = pair_flow_batch if fine else multicast_flow_batch
-    parts = [flow_fn(placement, j, j + 1, words)]
+    parts = [cached_flow_batch(placement, j, j + 1, words, fine)]
     for s, t, w in skips:
-        parts.append(flow_fn(placement, s, t, w))
+        parts.append(cached_flow_batch(placement, s, t, w, fine))
     return analyze(FlowBatch.concat(parts), hw, topology)
 
 
@@ -385,9 +387,30 @@ def _dp_frontier(seg: Segment, plan_ij, max_span: int) -> List[Candidate]:
     return best[seg.start]
 
 
+def _sim_rerank(viable: Sequence[Candidate], hw: HWConfig,
+                topology: Topology) -> Candidate:
+    """Re-rank the guarded Pareto frontier by *simulated* latency.
+
+    Every candidate here already dominates (or is) the uniform choice on
+    the analytical objective; the simulator breaks the remaining ties with
+    measured fill, transport serialization and backpressure instead of the
+    closed-form interval model.  Analytical (latency, dram) stay as the
+    deterministic tie-breakers so ``sim_check`` is a refinement, never a
+    regression, of the default selection order.
+    """
+    from .simulator import simulate_segment   # deferred: simulator imports us
+
+    def sim_latency(cand: Candidate) -> float:
+        return sum(simulate_segment(p, hw, topology).latency_cycles
+                   for p in cand[2])
+
+    return min(viable, key=lambda c: (sim_latency(c), c[0], c[1]))
+
+
 def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
                           topology: Topology, df_fn,
-                          engine: str = "batch") -> List[SegmentPlan]:
+                          engine: str = "batch",
+                          sim_check: bool = False) -> List[SegmentPlan]:
     plan_ij = _segment_planner(g, hw, topology, df_fn, engine=engine)
     u_lat, u_dram, u_plans = _select(_uniform_candidates(seg, plan_ij))
     if seg.depth == 1:
@@ -399,12 +422,16 @@ def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
     viable = [(l, d, p) for l, d, p in frontier
               if l <= u_lat and d <= u_dram]
     viable.append((u_lat, u_dram, u_plans))
-    _, _, chosen = _select(viable)
+    if sim_check:
+        _, _, chosen = _sim_rerank(viable, hw, topology)
+    else:
+        _, _, chosen = _select(viable)
     return list(chosen)
 
 
 def plan_pipeorgan(g: Graph, hw: HWConfig,
-                   topology: Topology = Topology.AMP) -> PlanResult:
+                   topology: Topology = Topology.AMP,
+                   sim_check: bool = False) -> PlanResult:
     """Full PipeOrgan flow (Fig. 7) with the cut-point DP mapper.
 
     Stage 1's footprint heuristic gives the *maximum useful* depth per
@@ -413,11 +440,18 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
     budgets — Sec. III-A — so the mapper keeps the heuristic depth only
     when the evaluated cost agrees), allowing mixed depths the uniform
     enumeration cannot express while never doing worse than it.
+
+    ``sim_check=True`` re-ranks each segment's guarded Pareto frontier by
+    event-*simulated* latency (the differential oracle) instead of the
+    analytical objective alone — worth its cost when plans are computed
+    offline or the workload is served long enough to amortize it (see
+    docs/simulator.md).
     """
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plans.extend(_best_subsegmentation(g, s, hw, topology,
-                                           _pipeorgan_df_fn))
+                                           _pipeorgan_df_fn,
+                                           sim_check=sim_check))
     return PlanResult(g.name, "pipeorgan", topology, plans)
 
 

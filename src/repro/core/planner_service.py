@@ -21,11 +21,12 @@ from typing import Dict, Mapping, Optional, Tuple
 
 from .graph import Graph
 from .hwconfig import HWConfig, PAPER_HW
-from .noc import Topology
+from .noc import Topology, flow_batch_cache_info
 from .planner import (PlanResult, plan_layer_by_layer, plan_pipeorgan,
                       plan_pipeorgan_uniform, plan_simba_like,
                       plan_tangram_like)
-from .simulator import (DEFAULT_MAX_BURSTS, ValidationReport, validate_plan)
+from .simulator import (DEFAULT_MAX_BURSTS, ValidationReport, sim_cache_info,
+                        validate_plan)
 
 CacheInfo = collections.namedtuple("CacheInfo",
                                    ["hits", "misses", "maxsize", "currsize"])
@@ -72,21 +73,36 @@ class Planner:
     # -- planning ------------------------------------------------------------
     def plan(self, g: Graph, hw: HWConfig = PAPER_HW,
              topology: Optional[Topology] = None,
-             strategy: str = "pipeorgan") -> PlanResult:
+             strategy: str = "pipeorgan",
+             sim_check: bool = False) -> PlanResult:
+        """Plan ``g``, through the LRU cache.
+
+        ``sim_check=True`` (pipeorgan only) re-ranks the DP's guarded
+        Pareto frontier by event-simulated latency — slower to plan, and
+        cached under its own key so a simulation-validated plan never
+        shadows a plain analytical one.
+        """
         if strategy not in _STRATEGY_TABLE:
             raise ValueError(f"unknown strategy {strategy!r}; "
                              f"one of {sorted(_STRATEGY_TABLE)}")
+        if sim_check and strategy != "pipeorgan":
+            raise ValueError("sim_check re-ranks the cut-point DP's Pareto "
+                             "frontier; only strategy='pipeorgan' has one")
         fn, default_topo = _STRATEGY_TABLE[strategy]
         topology = topology or default_topo
-        key = (graph_fingerprint(g), hw, topology, strategy)
+        key = (graph_fingerprint(g), hw, topology, strategy, sim_check)
         with self._lock:
             if key in self._cache:
                 self._cache.move_to_end(key)
                 self._hits += 1
                 return self._cache[key]
             self._misses += 1
-        result = (plan_layer_by_layer(g, hw) if fn is None
-                  else fn(g, hw, topology))
+        if fn is None:
+            result = plan_layer_by_layer(g, hw)
+        elif sim_check:
+            result = fn(g, hw, topology, sim_check=True)
+        else:
+            result = fn(g, hw, topology)
         with self._lock:
             self._cache[key] = result
             self._cache.move_to_end(key)
@@ -121,10 +137,47 @@ class Planner:
         return validate_plan(plan, hw, max_bursts=max_bursts)
 
     # -- cache management ----------------------------------------------------
-    def cache_info(self) -> CacheInfo:
-        with self._lock:
-            return CacheInfo(self._hits, self._misses, self.maxsize,
-                             len(self._cache))
+    def cache_info(self, cache: str = "plan") -> CacheInfo:
+        """Hit/miss/size statistics for any cache the planner stack uses.
+
+        ``cache`` selects one of the layers ``cache_info_all`` reports;
+        the default (``"plan"``) keeps the historical behavior — the
+        facade's own plan LRU.
+        """
+        if cache == "plan":
+            with self._lock:
+                return CacheInfo(self._hits, self._misses, self.maxsize,
+                                 len(self._cache))
+        try:
+            return self.cache_info_all()[cache]
+        except KeyError:
+            raise ValueError(f"unknown cache {cache!r}; one of "
+                             f"{sorted(self.cache_info_all())}") from None
+
+    def cache_info_all(self) -> Dict[str, CacheInfo]:
+        """Every cache between a ``plan()`` call and the NoC engine:
+
+        * ``plan``         — this facade's PlanResult LRU
+        * ``place``        — ``planner._cached_place`` (placement grids)
+        * ``pair_traffic`` — ``planner._pair_traffic`` (TrafficStats per
+          pipeline pair, the DP's dominant memoization)
+        * ``flow_batch``   — ``noc.cached_flow_batch`` (pair flow sets,
+          shared by the DP, the simulator and ``validate``)
+        * ``sim_programs`` — the simulator's compiled transport programs
+          (path expansion + impulse response)
+        """
+        from .planner import _cached_place, _pair_traffic
+        place_info = _cached_place.cache_info()
+        pair_info = _pair_traffic.cache_info()
+        return {
+            "plan": self.cache_info(),
+            "place": CacheInfo(place_info.hits, place_info.misses,
+                               place_info.maxsize, place_info.currsize),
+            "pair_traffic": CacheInfo(pair_info.hits, pair_info.misses,
+                                      pair_info.maxsize, pair_info.currsize),
+            "flow_batch": CacheInfo(*flow_batch_cache_info()),
+            "sim_programs": CacheInfo(*sim_cache_info()),
+        }
 
     def clear_cache(self) -> None:
         with self._lock:

@@ -1,0 +1,234 @@
+"""Parity suite for the max-plus simulator engine (PR-3 tentpole).
+
+``simulate_segment`` (batched max-plus recurrences + impulse-response
+transport) must reproduce ``simulate_reference`` (the original scalar
+burst loop) across every topology x spatial organization x depth:
+bit-level link loads, 1e-6-relative latency, matching per-pair intervals
+and congestion flags.  Plus the steady-state properties the extrapolation
+contract rests on: raising ``max_bursts`` converges monotonically toward
+the full run, and ``_tail_rate`` can never hand ``_Timeline`` a
+sub-physical (catch-up transient) extrapolation rate.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (LATENCY_BAND, PAPER_HW, Planner, Topology,
+                        flow_batch_cache_info, plan_pipeorgan,
+                        simulate_plan, simulate_reference, simulate_segment)
+from repro.core.depth import Segment
+from repro.core.graph import Graph, add, chain, conv
+from repro.core.hwconfig import HWConfig
+from repro.core.planner import _pipeorgan_df_fn, _plan_segment
+from repro.core.simulator import _Timeline, _tail_rate
+from repro.core.spatial import SpatialOrg
+
+SIM_HW = HWConfig(name="sim-test", pe_rows=8, pe_cols=8, sram_bytes=1 << 16,
+                  rf_bytes_per_pe=256, dram_bw_bytes_per_cycle=64.0)
+
+ALL_TOPOLOGIES = list(Topology)
+ALL_ORGS = list(SpatialOrg)
+DEPTHS = (1, 2, 4, 8)
+
+#: latency agreement between the two engines: the max-plus superposition
+#: re-associates float additions (t0 enters a chain's sum at the other
+#: end), nothing more.
+PARITY_RTOL = 1e-6
+
+
+def _sweep_chain(depth: int) -> Graph:
+    return chain("sweep", [conv(f"c{i}", 1, 16, 16, 8, 8, r=3)
+                           for i in range(depth)])
+
+
+def _forced_plan(g: Graph, depth: int, topology: Topology,
+                 org: SpatialOrg, via_gb: bool = False):
+    return _plan_segment(g, Segment(0, depth), SIM_HW, topology,
+                         _pipeorgan_df_fn, org if depth > 1 else None,
+                         via_gb)
+
+
+def _assert_parity(vec, ref):
+    assert vec.latency_cycles == pytest.approx(ref.latency_cycles,
+                                               rel=PARITY_RTOL)
+    # link loads come from the identical (flow, hop) accumulation -> exact
+    assert vec.link_loads == ref.link_loads
+    assert vec.peak_link_load == ref.peak_link_load
+    assert vec.hop_words_per_burst == ref.hop_words_per_burst
+    assert vec.total_link_words == pytest.approx(ref.total_link_words,
+                                                 rel=1e-12)
+    assert vec.pair_intervals == pytest.approx(ref.pair_intervals,
+                                               rel=PARITY_RTOL)
+    assert vec.pair_peak_loads == ref.pair_peak_loads
+    assert vec.pair_congested == ref.pair_congested
+    assert vec.congested == ref.congested
+    assert vec.n_bursts == ref.n_bursts
+    assert vec.simulated_bursts == ref.simulated_bursts
+    assert vec.dram_bytes == ref.dram_bytes
+
+
+# ---------------------------------------------------------------------------
+# the parity sweep: 4 topologies x 4 organizations x depths {1, 2, 4, 8}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("org", ALL_ORGS)
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_engines_agree_across_grid(topology, org, depth):
+    plan = _forced_plan(_sweep_chain(depth), depth, topology, org)
+    for max_bursts in (8, 48, 512):
+        vec = simulate_segment(plan, SIM_HW, topology, max_bursts=max_bursts)
+        ref = simulate_reference(plan, SIM_HW, topology,
+                                 max_bursts=max_bursts)
+        _assert_parity(vec, ref)
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+def test_engines_agree_via_global_buffer(topology):
+    plan = _forced_plan(_sweep_chain(4), 4, topology,
+                        SpatialOrg.BLOCKED_2D, via_gb=True)
+    vec = simulate_segment(plan, SIM_HW, topology, max_bursts=128)
+    ref = simulate_reference(plan, SIM_HW, topology, max_bursts=128)
+    _assert_parity(vec, ref)
+    assert vec.peak_link_load == 0.0
+
+
+def test_engines_agree_with_skip_connections():
+    ops = [conv("a", 1, 16, 16, 8, 8, r=3),
+           conv("b", 1, 16, 16, 8, 8, r=3, inputs=("a",)),
+           conv("c", 1, 16, 16, 8, 8, r=3, inputs=("b",)),
+           add("d", 1, 16, 16, 8, inputs=("c", "a"))]
+    g = Graph("skipseg", ops)
+    for org in (SpatialOrg.BLOCKED_1D, SpatialOrg.FINE_STRIPED_1D):
+        plan = _plan_segment(g, Segment(0, 4), SIM_HW, Topology.MESH,
+                             _pipeorgan_df_fn, org, False)
+        assert plan.intra_skips
+        vec = simulate_segment(plan, SIM_HW, Topology.MESH, max_bursts=96)
+        ref = simulate_reference(plan, SIM_HW, Topology.MESH, max_bursts=96)
+        _assert_parity(vec, ref)
+
+
+def test_engines_agree_on_paper_substrate():
+    """One full-size (32x32) deep segment — the sim_speed benchmark shape."""
+    g = chain("deep", [conv(f"c{i}", 1, 32, 32, 16, 16, r=3)
+                       for i in range(8)])
+    for org in (SpatialOrg.BLOCKED_1D, SpatialOrg.CHECKERBOARD_2D):
+        plan = _plan_segment(g, Segment(0, 8), PAPER_HW, Topology.AMP,
+                             _pipeorgan_df_fn, org, False)
+        vec = simulate_segment(plan, PAPER_HW, Topology.AMP, max_bursts=64)
+        ref = simulate_reference(plan, PAPER_HW, Topology.AMP, max_bursts=64)
+        _assert_parity(vec, ref)
+
+
+# ---------------------------------------------------------------------------
+# extrapolation properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", [Topology.MESH, Topology.AMP])
+@pytest.mark.parametrize("org", ALL_ORGS)
+@pytest.mark.parametrize("depth", (2, 4, 8))
+def test_raising_max_bursts_never_loosens_the_ratio(topology, org, depth):
+    """More simulated bursts monotonically approach the full run, so the
+    analytical/simulated ratio can only tighten toward its limit — the
+    property the DEFAULT_MAX_BURSTS raise (64 -> 512) and the re-measured
+    band constants rest on."""
+    plan = _forced_plan(_sweep_chain(depth), depth, topology, org)
+    full = simulate_segment(plan, SIM_HW, topology,
+                            max_bursts=10 ** 6).latency_cycles
+    prev_dev = math.inf
+    for max_bursts in (4, 8, 16, 32, 64, 128):
+        lat = simulate_segment(plan, SIM_HW, topology,
+                               max_bursts=max_bursts).latency_cycles
+        dev = abs(lat - full) / full
+        assert dev <= prev_dev + 1e-9, (
+            f"max_bursts={max_bursts} moved AWAY from the full run "
+            f"({prev_dev:.3e} -> {dev:.3e})")
+        prev_dev = dev
+        ratio = plan.cost.latency_cycles / lat
+        assert LATENCY_BAND[0] <= ratio <= LATENCY_BAND[1]
+
+
+def test_tail_rate_floors_catchup_transients():
+    """Regression: a simulated prefix ending inside a fill-induced
+    catch-up transient (arrivals bunched after a late first burst) used to
+    measure a near-0 tail rate, making ``_Timeline.at`` extrapolate
+    impossibly fast arrivals.  The rate-chained floor is now mandatory."""
+    # burst 0 gated late by fill; the rest land almost simultaneously as
+    # the backlog flushes -> measured tail spacing ~ 0
+    times = [100.0, 100.5, 100.5, 100.5, 100.5, 100.5]
+    service_bound = 7.0
+    rate = _tail_rate(times, service_bound)
+    assert rate == service_bound        # floored, not the measured ~0
+
+    tl = _Timeline(times, rate)
+    horizon = tl.at(1000)
+    assert horizon >= times[-1] + (1000 - len(times) + 1) * service_bound
+    # and the vectorized gather agrees with the scalar extrapolation
+    idx = np.array([-1, 0, 5, 6, 1000])
+    np.testing.assert_allclose(tl.at_many(idx),
+                               [tl.at(int(i)) for i in idx])
+
+
+def test_tail_rate_flat_cluster_is_floored():
+    assert _tail_rate([50.0, 50.0, 50.0, 50.0], 3.0) == 3.0
+    assert _tail_rate([50.0], 3.0) == 3.0          # too short: floor
+    assert _tail_rate([0.0, 4.0, 8.0, 12.0], 1.0) == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# sim_check planning and cache statistics
+# ---------------------------------------------------------------------------
+
+
+def test_sim_check_never_worsens_simulated_latency():
+    g = chain("simcheck", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
+                           for i in range(6)])
+    base = plan_pipeorgan(g, SIM_HW, Topology.AMP)
+    checked = plan_pipeorgan(g, SIM_HW, Topology.AMP, sim_check=True)
+    sim_base = simulate_plan(base, SIM_HW).latency_cycles
+    sim_checked = simulate_plan(checked, SIM_HW).latency_cycles
+    assert sim_checked <= sim_base * (1 + 1e-9)
+    # both still cover every op exactly once
+    for plan in (base, checked):
+        assert sum(s.segment.depth for s in plan.segments) == len(g.ops)
+
+
+def test_planner_facade_sim_check_key_and_guard():
+    planner = Planner(maxsize=8)
+    g = chain("facade-sim", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
+                             for i in range(4)])
+    a = planner.plan(g, SIM_HW, Topology.MESH)
+    b = planner.plan(g, SIM_HW, Topology.MESH, sim_check=True)
+    assert planner.cache_info().misses == 2     # distinct cache keys
+    assert planner.plan(g, SIM_HW, Topology.MESH, sim_check=True) is b
+    assert planner.plan(g, SIM_HW, Topology.MESH) is a
+    with pytest.raises(ValueError):
+        planner.plan(g, SIM_HW, strategy="tangram", sim_check=True)
+
+
+def test_cache_info_exposes_every_layer():
+    planner = Planner(maxsize=8)
+    info = planner.cache_info_all()
+    assert set(info) == {"plan", "place", "pair_traffic", "flow_batch",
+                         "sim_programs"}
+    for ci in info.values():
+        assert ci.hits >= 0 and ci.misses >= 0 and ci.currsize >= 0
+    assert planner.cache_info("flow_batch") == info["flow_batch"]
+    with pytest.raises(ValueError):
+        planner.cache_info("nope")
+
+
+def test_flow_batch_cache_is_shared_between_planner_and_simulator():
+    from repro.core import sim_cache_clear
+
+    # planning generates pair flow batches through the shared cache ...
+    plan = _forced_plan(_sweep_chain(4), 4, Topology.MESH,
+                        SpatialOrg.FINE_STRIPED_1D)
+    sim_cache_clear()      # drop compiled programs, keep flow batches
+    h0 = flow_batch_cache_info()[0]
+    # ... so the simulator's path expansion re-finds them as cache HITS
+    simulate_segment(plan, SIM_HW, Topology.MESH, max_bursts=16)
+    assert flow_batch_cache_info()[0] > h0
