@@ -363,9 +363,19 @@ def sim_speed() -> List[dict]:
 def planner_speed() -> List[dict]:
     """End-to-end ``plan_pipeorgan`` wall-clock over all XR-Bench tasks:
     the memoized DP + vectorized NoC planner vs the pre-refactor scalar
-    planner, plus the facade's warm-cache path (inline-serving cost)."""
+    planner, plus the facade's warm-cache path (inline-serving cost).
+
+    Timing note (stage-1 skip accounting): ``depth.segment_graph`` used to
+    re-walk ``Graph.skip_edges()`` — an O(ops x inputs) scan — for every
+    (start, depth) footprint probe, quadratic on skip-dense graphs.  The
+    ``SkipIndex`` prefix structures (one edge extraction per call, an
+    incremental sweep cursor per start position) make stage-1 linear in
+    the edge count; the ``stage1_us_per_graph`` row tracks it so a future
+    regression is visible in this benchmark's artifact diff.
+    """
     import repro.core.planner as planner_mod
     from repro.core import plan_pipeorgan, plan_pipeorgan_reference
+    from repro.core.depth import segment_graph
 
     # cold start: drop every cross-call cache so the DP pays full price
     planner_mod._pair_traffic.cache_clear()
@@ -395,6 +405,16 @@ def planner_speed() -> List[dict]:
     rows.append({"task": "TOTAL", "dp_s": round(t_dp_total, 3),
                  "reference_s": round(t_ref_total, 3),
                  "speedup": round(t_ref_total / t_dp_total, 2)})
+    # stage-1 segmentation on its own (SkipIndex prefix structures)
+    tasks = all_tasks()
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for g in tasks.values():
+            segment_graph(g, PAPER_HW)
+    t_stage1 = (time.perf_counter() - t0) / (reps * len(tasks))
+    rows.append({"task": "STAGE1", "stage1_us_per_graph":
+                 round(t_stage1 * 1e6, 1)})
     return rows
 
 

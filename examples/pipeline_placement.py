@@ -42,3 +42,36 @@ for s in plan.segments[:8]:
           f"latency {s.cost.latency_cycles:.3e}")
 print(f"  ... {len(plan.segments)} segments, total latency "
       f"{plan.latency_cycles:.3e} cycles")
+
+
+# branch-aware co-placement: a series-parallel region (e.g. a ResNet
+# block's {c1,c2,c3} || {proj} branches) placed side by side on the
+# substrate instead of serialized in topological order.  The ASCII map
+# shows each PE's owning slot: branches own disjoint regions, and the
+# join absorbs every branch tail.
+def render_substrate(seg, downsample=2):
+    grid = seg.placement.grid[::downsample, ::downsample]
+    # one glyph per slot; sized past hw.max_depth (32 on the paper array)
+    glyphs = "0123456789abcdefghijklmnopqrstuvwxyzABCDEF"
+    branch_of = {s: bi for bi, br in enumerate(seg.branches) for s in br}
+    print(f"\n  substrate map ({seg.org.value}"
+          f"{', via GB' if seg.placement.via_global_buffer else ''}; "
+          f"one char per {downsample}x{downsample} PEs):")
+    for row in grid:
+        print("    " + "".join(glyphs[s] for s in row))
+    for slot, op in enumerate(seg.ops):
+        role = (f"branch {branch_of[slot]}" if slot in branch_of
+                else ("join" if slot == len(seg.ops) - 1 else "fork"))
+        print(f"    {glyphs[slot]} = {op.name:14s} ({role}, "
+              f"{seg.pe_alloc[slot]} PEs)")
+    print("    pipeline edges:", " ".join(f"{u}->{v}" for u, v in seg.edges))
+
+
+branchy = get_planner().plan(all_tasks()["object_detection"], hw=PAPER_HW)
+branch_segs = [s for s in branchy.segments if s.edges]
+print(f"\nbranch co-placement (object_detection: "
+      f"{len(branch_segs)} branch-parallel segment(s)):")
+for seg in branch_segs[:1]:
+    names = [op.name for op in seg.ops]
+    print(f"  ops[{seg.segment.start}:{seg.segment.stop}] = {names}")
+    render_substrate(seg)

@@ -17,17 +17,20 @@ Stage 2 — HW mapping and NoC architecture:
                   testing oracle for the analytical model above
 """
 from .dataflow import Dataflow, choose_dataflow, best_case_arithmetic_intensity
-from .depth import Segment, segment_depths, segment_graph
+from .depth import Segment, SkipIndex, segment_depths, segment_graph
 from .granularity import Granularity, finest_granularity
-from .graph import Graph, Op, OpKind, add, chain, concat, conv, dwconv, gemm
+from .graph import (BranchRegion, Graph, Op, OpKind, SPBlock, add,
+                    branch_regions, chain, concat, conv, dwconv, gemm,
+                    series_parallel_decomposition)
 from .hwconfig import HWConfig, PAPER_HW, TPU_V5E
 from .noc import (Flow, FlowBatch, Topology, TrafficStats, analyze,
                   analyze_reference, cached_flow_batch, flow_batch_cache_clear,
-                  flow_batch_cache_info, multicast_flow_batch,
+                  flow_batch_cache_info, join_flow_batch, multicast_flow_batch,
                   pair_flow_batch, segment_flows)
-from .pipeline_model import SegmentCost, segment_cost
-from .planner import (PlanResult, SegmentPlan, STRATEGIES, plan_layer_by_layer,
-                      plan_pipeorgan, plan_pipeorgan_reference,
+from .pipeline_model import SegmentCost, chain_edges, segment_cost
+from .planner import (PlanResult, SegmentPlan, STRATEGIES, edges_on_path,
+                      plan_layer_by_layer, plan_pipeorgan,
+                      plan_pipeorgan_linear, plan_pipeorgan_reference,
                       plan_pipeorgan_uniform, plan_simba_like,
                       plan_tangram_like)
 from .planner_service import CacheInfo, Planner, get_planner, graph_fingerprint
@@ -36,26 +39,31 @@ from .simulator import (DEFAULT_MAX_BURSTS, LATENCY_BAND,
                         SegmentValidation, ValidationReport, sim_cache_clear,
                         sim_cache_info, simulate_plan, simulate_reference,
                         simulate_segment, validate_plan)
-from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
+from .spatial import (Placement, SpatialOrg, allocate_pes, choose_spatial_org,
+                      place, place_branches)
 
 __all__ = [
     "Dataflow", "choose_dataflow", "best_case_arithmetic_intensity",
-    "Segment", "segment_depths", "segment_graph",
+    "Segment", "SkipIndex", "segment_depths", "segment_graph",
     "Granularity", "finest_granularity",
-    "Graph", "Op", "OpKind", "add", "chain", "concat", "conv", "dwconv",
-    "gemm", "HWConfig", "PAPER_HW", "TPU_V5E",
+    "BranchRegion", "Graph", "Op", "OpKind", "SPBlock", "add",
+    "branch_regions", "chain", "concat", "conv", "dwconv", "gemm",
+    "series_parallel_decomposition",
+    "HWConfig", "PAPER_HW", "TPU_V5E",
     "Flow", "FlowBatch", "Topology", "TrafficStats", "analyze",
     "analyze_reference", "cached_flow_batch", "flow_batch_cache_clear",
-    "flow_batch_cache_info", "multicast_flow_batch", "pair_flow_batch",
-    "segment_flows",
-    "SegmentCost", "segment_cost",
-    "PlanResult", "SegmentPlan", "STRATEGIES", "plan_layer_by_layer",
-    "plan_pipeorgan", "plan_pipeorgan_reference", "plan_pipeorgan_uniform",
-    "plan_simba_like", "plan_tangram_like",
+    "flow_batch_cache_info", "join_flow_batch", "multicast_flow_batch",
+    "pair_flow_batch", "segment_flows",
+    "SegmentCost", "chain_edges", "segment_cost",
+    "PlanResult", "SegmentPlan", "STRATEGIES", "edges_on_path",
+    "plan_layer_by_layer", "plan_pipeorgan", "plan_pipeorgan_linear",
+    "plan_pipeorgan_reference", "plan_pipeorgan_uniform", "plan_simba_like",
+    "plan_tangram_like",
     "CacheInfo", "Planner", "get_planner", "graph_fingerprint",
     "DEFAULT_MAX_BURSTS", "LATENCY_BAND", "LATENCY_BAND_UNCONGESTED",
     "SimReport", "SegmentSimReport", "SegmentValidation", "ValidationReport",
     "sim_cache_clear", "sim_cache_info", "simulate_plan",
     "simulate_reference", "simulate_segment", "validate_plan",
-    "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org", "place",
+    "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org",
+    "place", "place_branches",
 ]

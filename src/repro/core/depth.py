@@ -7,11 +7,20 @@ case of skip connections we also add additional activations due to skip
 connections [to the activation side] ... We also cut the depth if we
 encounter a complex layer like ROIAlign.  The depth is also limited by the
 size of the substrate: the maximum depth we consider is sqrt(numPEs)."
+
+Branch-aware segments: a ``Segment`` may carry parallel ``branches`` —
+disjoint groups of its op indices that execute side by side on the
+substrate instead of being serialized in topological order (the
+series-parallel regions of ``graph.branch_regions``).  ``branches == ()``
+is the ordinary linear segment; the footprint accounting is shared (skip
+activations interior to the interval never count against the boundary,
+whether the interval is executed as a chain or as co-placed branches).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+import heapq
+from typing import List, Optional, Tuple
 
 from .graph import Graph, COMPLEX_KINDS
 from .hwconfig import HWConfig
@@ -19,13 +28,27 @@ from .hwconfig import HWConfig
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
-    """A pipeline segment: ops[start:stop] (topological indices)."""
+    """A pipeline segment: ops[start:stop] (topological indices).
+
+    ``branches`` marks the segment as branch-parallel: each group holds
+    *segment-relative* slot indices (0 = ``ops[start]``), topologically
+    ordered, of ops placed side by side that converge on the segment's
+    final op (the join).  The default ``()`` keeps the linear-chain
+    semantics everywhere else.  (``graph.BranchRegion.branches``, by
+    contrast, uses absolute op indices — the planner converts when it
+    builds the segment.)
+    """
     start: int
     stop: int  # exclusive
+    branches: Tuple[Tuple[int, ...], ...] = ()
 
     @property
     def depth(self) -> int:
         return self.stop - self.start
+
+    @property
+    def is_branched(self) -> bool:
+        return bool(self.branches)
 
     def __contains__(self, idx: int) -> bool:
         return self.start <= idx < self.stop
@@ -41,22 +64,83 @@ class Segment:
         return range(i + 1, min(i + max_span, self.stop) + 1)
 
 
-def _activation_footprint(g: Graph, start: int, stop: int) -> int:
+class SkipIndex:
+    """Precomputed per-edge structures for skip-crossing queries.
+
+    ``_activation_footprint`` used to re-walk ``g.skip_edges()`` — itself
+    an O(ops x inputs) scan — for every (start, stop) candidate the greedy
+    depth heuristic probes, a quadratic rescan on skip-dense graphs.  The
+    index extracts the (producer, consumer, volume) arrays once; a
+    one-off query (``crossing``) is then a single pass over the edges,
+    and the dominant access pattern — the greedy sweep holds ``start``
+    fixed while ``stop`` grows — touches each edge O(1) times amortized
+    through the incremental ``sweep`` cursor.
+    """
+
+    def __init__(self, g: Graph):
+        self.edges = g.skip_edges()                 # one O(ops) walk, total
+        self.vols = [g.ops[p].output_volume() for p, c in self.edges]
+
+    def crossing(self, start: int, stop: int) -> int:
+        """Total producer volume of skip edges with exactly one endpoint
+        inside [start, stop)."""
+        total = 0
+        for (p, c), v in zip(self.edges, self.vols):
+            if (p < start <= c < stop) or (start <= p < stop <= c):
+                total += v
+        return total
+
+    def sweep(self, start: int):
+        """Incremental crossing volumes for a fixed ``start``.
+
+        Returns a callable ``crossing_at(stop)`` that must be invoked with
+        non-decreasing ``stop`` values (the greedy heuristic's access
+        pattern).  Each edge enters/leaves the crossing set at most once
+        across the whole sweep, so a full depth probe costs O(edges)
+        instead of O(depth x edges).
+        """
+        # type-A edges (p < start <= c): enter when stop passes c
+        # type-B edges (start <= p): enter when stop passes p, leave when
+        # stop passes c
+        pcv = [(p, c, v) for (p, c), v in zip(self.edges, self.vols)]
+        a_events = sorted((c, v) for p, c, v in pcv if p < start <= c)
+        b_edges = sorted((p, c, v) for p, c, v in pcv if p >= start)
+        state = {"ai": 0, "bi": 0, "acc": 0, "open": []}
+
+        def crossing_at(stop: int) -> int:
+            while state["ai"] < len(a_events) and \
+                    a_events[state["ai"]][0] < stop:
+                state["acc"] += a_events[state["ai"]][1]
+                state["ai"] += 1
+            while state["bi"] < len(b_edges) and \
+                    b_edges[state["bi"]][0] < stop:
+                p, c, v = b_edges[state["bi"]]
+                state["acc"] += v
+                heapq.heappush(state["open"], (c, v))
+                state["bi"] += 1
+            while state["open"] and state["open"][0][0] < stop:
+                _, v = heapq.heappop(state["open"])
+                state["acc"] -= v
+            return state["acc"]
+
+        return crossing_at
+
+
+def _activation_footprint(g: Graph, start: int, stop: int,
+                          index: Optional[SkipIndex] = None) -> int:
     """A_l + A_{l+D} + skip activations crossing the segment boundary.
 
     Sec. III-A: activations interior to the segment are forwarded
     producer->consumer (granularity-sized), so only the segment's external
     input, its final output, and every skip-connection activation with one
-    endpoint outside (start, stop) count.
+    endpoint outside (start, stop) count.  This holds for branch-parallel
+    intervals too: a co-placed branch's activations are just as interior.
     """
     ops = g.ops
     a_in = ops[start].input_volume()
     a_out = ops[stop - 1].output_volume()
-    skips = 0
-    for p, c in g.skip_edges():
-        crosses = (p < start <= c < stop) or (start <= p < stop <= c)
-        if crosses:
-            skips += ops[p].output_volume()
+    skips = (index.crossing(start, stop) if index is not None
+             else SkipIndex(g).crossing(start, stop))
     return a_in + a_out + skips
 
 
@@ -70,6 +154,7 @@ def segment_graph(g: Graph, hw: HWConfig) -> List[Segment]:
     n = len(g.ops)
     l = 0
     max_depth = hw.max_depth
+    index = SkipIndex(g)
     while l < n:
         # a complex layer runs alone (depth cut on both sides)
         if g.ops[l].kind in COMPLEX_KINDS:
@@ -77,6 +162,9 @@ def segment_graph(g: Graph, hw: HWConfig) -> List[Segment]:
             l += 1
             continue
         stop = l + 1
+        crossing_at = index.sweep(l)
+        a_in = g.ops[l].input_volume()
+        wgt = g.ops[l].weight_volume()
         while stop < n:
             nxt = g.ops[stop]
             if nxt.kind in COMPLEX_KINDS:
@@ -88,8 +176,8 @@ def segment_graph(g: Graph, hw: HWConfig) -> List[Segment]:
             if nxt.inputs and not any(
                     l <= g.index(s) < stop for s in nxt.inputs):
                 break
-            act = _activation_footprint(g, l, stop + 1)
-            wgt = _weight_footprint(g, l, stop + 1)
+            act = a_in + g.ops[stop].output_volume() + crossing_at(stop + 1)
+            wgt += g.ops[stop].weight_volume()
             if wgt > act:
                 break  # "the moment sum W_i is greater"
             stop += 1

@@ -206,6 +206,180 @@ class Graph:
         return sum(op.weight_volume() for op in self.ops)
 
 
+# ---------------------------------------------------------------------------
+# Series-parallel decomposition (branch-aware planning, CMDS-style regions)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SPBlock:
+    """One block of a series-parallel decomposition of an op interval.
+
+    ``branches == ()`` marks a *series* block: a single synchronization op
+    (every path through the interval passes through it).  A non-empty
+    ``branches`` marks a *parallel* block: the ops in ``[start, stop)`` are
+    partitioned into weakly-connected components ("branches") that carry no
+    edges between each other, so they can execute concurrently side by side
+    on the substrate.  Branch tuples hold absolute op indices in
+    topological order.
+    """
+
+    start: int
+    stop: int  # exclusive
+    branches: Tuple[Tuple[int, ...], ...] = ()
+
+    @property
+    def is_parallel(self) -> bool:
+        return bool(self.branches)
+
+
+def series_parallel_decomposition(g: Graph, start: int = 0,
+                                  stop: Optional[int] = None
+                                  ) -> List[SPBlock]:
+    """Decompose ``g.ops[start:stop]`` into series ops and parallel regions.
+
+    An op at index ``i`` is a *sync point* iff no edge (p, c) restricted to
+    the interval jumps it (``p < i < c``) — every dataflow path through the
+    interval is serialized through it.  Maximal runs of non-sync ops
+    between two sync points form one parallel block whose branches are the
+    weakly connected components of the interior edge set.
+
+    Properties (pinned by the hypothesis suite): the blocks partition
+    ``[start, stop)`` in topological order, every interior op lands in
+    exactly one branch, and a pure chain degrades to the identity
+    decomposition (every op its own series block).
+    """
+    n = len(g.ops)
+    if stop is None:
+        stop = n
+    if not 0 <= start <= stop <= n:
+        raise ValueError(f"bad interval [{start}, {stop}) for {n} ops")
+    if start == stop:
+        return []
+
+    # coverage[i] > 0 <=> some restricted edge jumps op i (difference array)
+    cover = [0] * (stop - start + 1)
+    edges: List[Tuple[int, int]] = []
+    for op in g.ops[start:stop]:
+        ci = g.index(op.name)
+        for src in op.inputs:
+            pi = g.index(src)
+            if pi < start:
+                continue
+            edges.append((pi, ci))
+            if ci - pi > 1:
+                cover[pi + 1 - start] += 1
+                cover[ci - start] -= 1
+    run = 0
+    sync = []
+    for i in range(start, stop):
+        run += cover[i - start]
+        if run == 0:
+            sync.append(i)
+
+    # union-find over interior ops: edges with both endpoints interior (and
+    # inside the same inter-sync gap, which is automatic: an edge spanning a
+    # sync point would contradict the sync property) merge branches.
+    sync_set = set(sync)
+    parent: Dict[int, int] = {}
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i in range(start, stop):
+        if i not in sync_set:
+            parent[i] = i
+    for p, c in edges:
+        if p in parent and c in parent:
+            rp, rc = find(p), find(c)
+            if rp != rc:
+                parent[rc] = rp
+
+    blocks: List[SPBlock] = []
+    i = start
+    while i < stop:
+        if i in sync_set:
+            blocks.append(SPBlock(i, i + 1))
+            i += 1
+            continue
+        j = i
+        while j < stop and j not in sync_set:
+            j += 1
+        comps: Dict[int, List[int]] = {}
+        for k in range(i, j):
+            comps.setdefault(find(k), []).append(k)
+        branches = tuple(sorted((tuple(sorted(v)) for v in comps.values()),
+                                key=lambda b: b[0]))
+        blocks.append(SPBlock(i, j, branches))
+        i = j
+    return blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class BranchRegion:
+    """A co-placeable fork/branches/join region over a contiguous interval.
+
+    ``ops[start:stop]`` is ``[fork?] + interior + [join]`` in topological
+    order: the (optional) fork op feeding every branch head, the parallel
+    branches (absolute op indices, ≥ 1 op each), and the join op consuming
+    every branch tail.  ``fork_to_join`` marks a direct fork→join data edge
+    (a zero-length branch: ResNet identity skips, DenseNet pass-through
+    concat inputs).
+    """
+
+    start: int
+    stop: int  # exclusive; ops[stop - 1] is the join
+    branches: Tuple[Tuple[int, ...], ...]
+    has_fork: bool
+    fork_to_join: bool = False
+
+    @property
+    def join(self) -> int:
+        return self.stop - 1
+
+    @property
+    def fork(self) -> Optional[int]:
+        return self.start if self.has_fork else None
+
+    @property
+    def depth(self) -> int:
+        return self.stop - self.start
+
+
+def branch_regions(g: Graph, start: int = 0, stop: Optional[int] = None,
+                   max_len: Optional[int] = None) -> List[BranchRegion]:
+    """Fork/branches/join regions of ``g.ops[start:stop]``.
+
+    One region per parallel block of ``series_parallel_decomposition``
+    whose following sync op (the join) lies inside the interval.  The
+    preceding sync op, when present, becomes the region's fork.  Regions
+    longer than ``max_len`` ops are dropped (they cannot fit a pipeline
+    segment anyway).  Edges entering or leaving the region elsewhere are
+    *allowed* — the planner accounts them as boundary-crossing skip
+    traffic, exactly like linear segments do.
+    """
+    blocks = series_parallel_decomposition(g, start, stop)
+    out: List[BranchRegion] = []
+    for bi, blk in enumerate(blocks):
+        if not blk.is_parallel:
+            continue
+        if bi + 1 >= len(blocks) or blocks[bi + 1].is_parallel:
+            continue  # no join inside the interval
+        join = blocks[bi + 1].start
+        has_fork = bi > 0 and not blocks[bi - 1].is_parallel
+        rstart = blk.start - 1 if has_fork else blk.start
+        if max_len is not None and join + 1 - rstart > max_len:
+            continue
+        fork_to_join = has_fork and any(
+            g.index(s) == rstart for s in g.ops[join].inputs)
+        out.append(BranchRegion(rstart, join + 1, blk.branches, has_fork,
+                                fork_to_join))
+    return out
+
+
 def chain(name: str, ops: Sequence[Op]) -> Graph:
     """Wire a plain chain (each op consumes its predecessor) into a Graph."""
     wired: List[Op] = []

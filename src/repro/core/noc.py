@@ -626,6 +626,30 @@ def flow_batch_cache_clear() -> None:
     _FLOW_BATCH_CACHE.clear()
 
 
+# ---------------------------------------------------------------------------
+# Join-aware flows (branch-parallel segments)
+# ---------------------------------------------------------------------------
+
+
+def join_flow_batch(placement: Placement, src_slots: Sequence[int],
+                    dst_slot: int, words_each: Sequence[float],
+                    fine: bool) -> FlowBatch:
+    """Converging flows: several producer regions feeding one consumer.
+
+    A branch-parallel segment's join (the ADD/CONCAT op) absorbs every
+    branch tail *in the same pipeline interval*, so its ingress contention
+    is a property of the union of the per-edge flow sets: concatenating
+    the batches in producer order and analyzing them as one keeps the
+    4-ingress-port arbitration shared across all converging producers —
+    the scalar walk and ``analyze`` assign ports in flow order, so the
+    union models two tails racing for the join region's ports where
+    per-edge analysis would give each tail its own private ports.
+    """
+    return FlowBatch.concat([
+        cached_flow_batch(placement, s, dst_slot, w, fine)
+        for s, w in zip(src_slots, words_each)])
+
+
 def segment_flows(placement: Placement,
                   interval_words: Sequence[float],
                   skip_pairs: Iterable[Tuple[int, int, float]] = ()

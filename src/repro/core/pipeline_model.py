@@ -95,6 +95,24 @@ def weight_dram_traffic(ops: Sequence[Op], dataflows: Sequence[Dataflow],
     return traffic
 
 
+def chain_edges(depth: int) -> Tuple[Tuple[int, int], ...]:
+    """The implicit linear pipeline DAG: slot j feeds slot j+1."""
+    return tuple((j, j + 1) for j in range(depth - 1))
+
+
+def gb_port_words_per_cycle(hw: HWConfig) -> float:
+    """Aggregate global-buffer port bandwidth (one word per column lane
+    per cycle) — the single definition shared by the analytical GB-staged
+    interval model and the simulator's GB port server, so the two price
+    the same serialization."""
+    return max(1.0, float(hw.pe_cols))
+
+
+def edge_burst_count(op_out_volume: int, producer_pes: int) -> int:
+    """Bursts an edge moves: one word per producer PE per interval."""
+    return max(1, math.ceil(max(1, op_out_volume) / max(1, producer_pes)))
+
+
 def segment_cost(
     ops: Sequence[Op],
     dataflows: Sequence[Dataflow],
@@ -107,11 +125,22 @@ def segment_cost(
     external_out_bytes: float,
     skip_in_bytes: float = 0.0,
     array_pes: Optional[int] = None,
+    edges: Optional[Sequence[Tuple[int, int]]] = None,
 ) -> SegmentCost:
+    """Price one segment.  ``edges=None`` keeps the original linear-chain
+    path bit-for-bit; an explicit edge list prices a branch-parallel slot
+    DAG through ``_dag_segment_cost`` (same per-pair interval equations,
+    generalized to fork multicasts, concurrent branches and join drains).
+    """
     D = len(ops)
     assert len(pe_alloc) == D
     if array_pes is None:
         array_pes = hw.num_pes
+    if edges is not None and D > 1:
+        return _dag_segment_cost(ops, dataflows, grans, pe_alloc, hw,
+                                 noc_stats, via_global_buffer,
+                                 external_in_bytes, external_out_bytes,
+                                 skip_in_bytes, array_pes, tuple(edges))
     ext_dram = external_in_bytes + external_out_bytes + skip_in_bytes
     w_traffic = weight_dram_traffic(ops, dataflows, hw, pe_alloc)
     dram = ext_dram + w_traffic
@@ -204,4 +233,113 @@ def segment_cost(
         sram_energy=sram_traffic * hw.e_sram,
         interval_delays=deltas,
         intervals=intervals,
+        congested=congested)
+
+
+def _dag_segment_cost(
+    ops: Sequence[Op],
+    dataflows: Sequence[Dataflow],
+    grans: Sequence[Granularity],
+    pe_alloc: Sequence[int],
+    hw: HWConfig,
+    noc_stats: Optional[Sequence[Optional[TrafficStats]]],
+    via_global_buffer: bool,
+    external_in_bytes: float,
+    external_out_bytes: float,
+    skip_in_bytes: float,
+    array_pes: int,
+    edges: Tuple[Tuple[int, int], ...],
+) -> SegmentCost:
+    """Fig. 3 interval equations over an explicit pipeline slot DAG.
+
+    ``edges[k] = (u, v)`` streams slot u's output into slot v;
+    ``grans[k]`` / ``noc_stats[k]`` align with ``edges``.  The linear
+    chain is the special case ``edges == chain_edges(D)`` (for which this
+    reproduces the classic path exactly); branch segments add fork
+    multicast out-edges, concurrent branch chains and multi-edge join
+    convergence.  Generalizations of the chain formulas:
+
+      * producer-side rate chaining follows every DAG path — an edge's
+        compute interval is floored by the slowest *incoming* edge of its
+        producer slot (burst-ratio converted), exactly like ``prev_delta
+        * n_prev / n_j`` chains along the chain;
+      * pipeline fill accumulates along the *critical path* of
+        ``delta_e x fill_e`` contributions rather than the full sum;
+      * the segment drains when the slowest edge into the sink (the
+        join) finishes: ``max over final edges of (path_fill + n_e *
+        delta_e)``.
+    """
+    D = len(ops)
+    assert len(grans) == len(edges)
+    ext_dram = external_in_bytes + external_out_bytes + skip_in_bytes
+    w_traffic = weight_dram_traffic(ops, dataflows, hw, pe_alloc)
+    dram = ext_dram + w_traffic
+    mem_stall = dram / hw.dram_bw_bytes_per_cycle
+
+    sink = D - 1
+    interior_bytes = sum(ops[u].output_volume() for u in range(D)
+                         if u != sink) * hw.bytes_per_word
+    sram_traffic = dram + (2.0 * interior_bytes if via_global_buffer
+                           else 0.0)
+
+    incoming: dict = {}
+    for k, (u, v) in enumerate(edges):
+        incoming.setdefault(v, []).append(k)
+
+    n_bursts: List[int] = []
+    deltas: List[float] = []
+    fills: List[int] = []
+    path_fill: List[float] = []
+    congested = False
+    max_hops = 0.0
+    hop_e = 0.0
+    for k, (u, v) in enumerate(edges):
+        outv = max(1, ops[u].output_volume())
+        n_src = max(1, pe_alloc[u])
+        n_dst = max(1, pe_alloc[v])
+        n_k = edge_burst_count(outv, n_src)
+        t_prod = op_work(ops[u], hw) / outv / hw.dot_product_size
+        inv = max(1, ops[v].input_volume())
+        t_cons = (n_src * op_work(ops[v], hw) / inv
+                  / (n_dst * hw.dot_product_size))
+        producer_side = max(
+            (deltas[d] * (n_bursts[d] / n_k) for d in incoming.get(u, ())),
+            default=0.0)
+        compute_interval = max(t_prod, t_cons, producer_side)
+        stats = (noc_stats[k]
+                 if (noc_stats is not None and not via_global_buffer)
+                 else None)
+        if stats is not None:
+            comm = stats.interval_comm_delay(compute_interval)
+            congested = congested or stats.congested(compute_interval)
+            max_hops = max(max_hops, stats.max_path_hops)
+            hop_e += stats.hop_energy(hw) * n_k
+        else:
+            comm = compute_interval
+        delta = max(compute_interval, comm) + mem_stall / max(1, n_k)
+        fill_k = min(n_k, max(1, math.ceil(grans[k].elements / n_src)))
+        upstream_fill = max(
+            (path_fill[d] for d in incoming.get(u, ())), default=0.0)
+        n_bursts.append(n_k)
+        deltas.append(delta)
+        fills.append(fill_k)
+        path_fill.append(upstream_fill + delta * fill_k)
+
+    finals = incoming.get(sink, [])
+    if not finals:
+        raise ValueError("pipeline DAG has no edge into the final slot")
+    latency = max(path_fill[k] + n_bursts[k] * deltas[k]
+                  for k in finals) + max_hops
+    comp_lb = max(op_compute_cycles(op, p, hw)
+                  for op, p in zip(ops, pe_alloc))
+    return SegmentCost(
+        latency_cycles=latency,
+        compute_cycles=comp_lb,
+        dram_bytes=dram,
+        sram_bytes=sram_traffic,
+        noc_hop_energy=hop_e,
+        dram_energy=dram * hw.e_dram,
+        sram_energy=sram_traffic * hw.e_sram,
+        interval_delays=deltas,
+        intervals=n_bursts,
         congested=congested)

@@ -34,14 +34,17 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .dataflow import Dataflow, choose_dataflow
 from .depth import Segment, segment_graph
-from .graph import COMPLEX_KINDS, Graph, Op, OpKind
+from .graph import (BranchRegion, COMPLEX_KINDS, Graph, Op, OpKind,
+                    branch_regions)
 from .granularity import Granularity, finest_granularity
 from .hwconfig import HWConfig
 from .noc import (FlowBatch, Topology, TrafficStats, analyze,
-                  analyze_reference, cached_flow_batch, multicast_flows,
-                  pair_flows)
-from .pipeline_model import SegmentCost, op_work, segment_cost
-from .spatial import Placement, SpatialOrg, allocate_pes, choose_spatial_org, place
+                  analyze_reference, cached_flow_batch, join_flow_batch,
+                  multicast_flows, pair_flows)
+from .pipeline_model import (SegmentCost, chain_edges, edge_burst_count,
+                             op_work, segment_cost)
+from .spatial import (Placement, SpatialOrg, allocate_pes, choose_spatial_org,
+                      place, place_branches)
 
 #: longest sub-segment span the cut-point DP evaluates exhaustively.  Spans
 #: beyond it (one 32-deep segment) are still considered through the
@@ -73,6 +76,16 @@ class SegmentPlan:
     skip_in_bytes: float = 0.0
     traffic_scale: float = 1.0
     array_pes: Optional[int] = None
+    # branch-parallel segments: the explicit pipeline slot DAG (slot u
+    # streams into slot v) and the slot-relative branch groups.  ``()``
+    # means the implicit linear chain, everywhere.
+    edges: Tuple[Tuple[int, int], ...] = ()
+    branches: Tuple[Tuple[int, ...], ...] = ()
+
+    @property
+    def pipeline_edges(self) -> Tuple[Tuple[int, int], ...]:
+        """The slot DAG this plan executes (explicit or implicit chain)."""
+        return self.edges or chain_edges(len(self.ops))
 
 
 @dataclasses.dataclass
@@ -159,6 +172,18 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     grans = [finest_granularity(ops[j], dfs[j], ops[j + 1], dfs[j + 1])
              for j in range(len(ops) - 1)]
 
+    # Fine-grained pipelining needs a producer->consumer stream: an op
+    # whose every input predates the span has nothing to stream from, so
+    # the span can only execute staged through the global buffer (the
+    # serialized-branch case — e.g. a ResNet projection whose input is the
+    # block's fork, or a decoder layer consuming a long-distance encoder
+    # tap).  Branch-parallel segments lift exactly this restriction by
+    # co-placing the region instead.
+    disconnected = any(
+        op.inputs and not any(
+            seg.start <= g.index(s) < seg.start + p for s in op.inputs)
+        for p, op in enumerate(ops) if p > 0)
+
     # substrate under-utilization (e.g. SIMBA-like can only spread C and K):
     # an op that cannot fill its partition runs on fewer effective PEs
     usable = hw.num_pes
@@ -191,7 +216,7 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     else:
         org, via_gb = choose_spatial_org(seg.depth, gran_bytes,
                                          mean_pes, hw)
-    if any(not gr.pipelinable for gr in grans):
+    if any(not gr.pipelinable for gr in grans) or disconnected:
         via_gb = True  # fall back to staging through the global buffer
 
     if engine == "batch":
@@ -252,6 +277,284 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
 
 
 # ---------------------------------------------------------------------------
+# Branch-parallel segments: co-placed fork/branches/join regions
+# ---------------------------------------------------------------------------
+
+
+def edges_on_path(edges: Sequence[Tuple[int, int]], s: int, t: int
+                  ) -> Tuple[Tuple[int, int], ...]:
+    """Edges of the pipeline slot DAG lying on some path from s to t.
+
+    The linear-chain special case reduces to the classic rule "skip (s, t)
+    rides every pair j with s <= j < t"; for a branch DAG an intra-region
+    skip rides only its own branch's stream.  Falls back to the edges into
+    ``t`` when the DAG carries no s->t path (the skip then only loads the
+    join's ingress, the closest physical approximation).
+    """
+    fwd: Dict[int, List[int]] = {}
+    back: Dict[int, List[int]] = {}
+    for u, v in edges:
+        fwd.setdefault(u, []).append(v)
+        back.setdefault(v, []).append(u)
+
+    def reach(start: int, adj: Dict[int, List[int]]) -> set:
+        seen = {start}
+        stack = [start]
+        while stack:
+            for nxt in adj.get(stack.pop(), ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        return seen
+
+    from_s = reach(s, fwd)
+    to_t = reach(t, back)
+    on = tuple((u, v) for u, v in edges if u in from_s and v in to_t)
+    if not on:
+        on = tuple((u, v) for u, v in edges if v == t)
+    return on
+
+
+def _region_streamable(g: Graph, region: BranchRegion) -> bool:
+    """Every fabricated pipeline edge must carry real data flow.
+
+    The region's slot DAG wires fork→head and consecutive branch members;
+    that is only an honest pipeline when each branch op actually consumes
+    something upstream *in its own stream* — the fork for a head (when
+    the fork is inside the segment), an earlier member of the same branch
+    (or the fork) otherwise.  The join must likewise consume every branch
+    *tail*, or the fabricated tail→join edge would stream data the join
+    never reads.  A parallel block of merely *interleaved* independent
+    chains (or one with a dead-end branch) fails this and is not offered
+    for co-placement (mirroring the linear rule that a sub-span with no
+    in-span producer cannot fine-pipeline).
+    """
+    fork = region.fork
+    join_srcs = {g.index(s) for s in g.ops[region.join].inputs}
+    for br in region.branches:
+        if br[-1] not in join_srcs:
+            return False
+        for pos, i in enumerate(br):
+            feeds = set(br[:pos])
+            if fork is not None:
+                feeds.add(fork)
+            srcs = {g.index(s) for s in g.ops[i].inputs}
+            if pos == 0 and fork is None:
+                continue       # forkless head streams its external input
+            if not srcs & feeds:
+                return False
+    return True
+
+
+def _region_edges(region: BranchRegion) -> Tuple[Tuple[int, int], ...]:
+    """Slot-relative pipeline DAG of a fork/branches/join region.
+
+    A direct fork→join data edge (``fork_to_join``) is deliberately NOT a
+    pipeline edge: the join re-reads the fork's output at its own pace, so
+    the tensor rides the branch streams as skip traffic (exactly how the
+    linear model treats reuse-distance > 1 edges) rather than forcing a
+    dedicated burst schedule through the fork's small partition.
+    """
+    base = region.start
+    join = region.stop - 1 - base
+    edges: List[Tuple[int, int]] = []
+    fork = 0 if region.has_fork else None
+    for br in region.branches:
+        rel = [i - base for i in br]
+        if fork is not None:
+            edges.append((fork, rel[0]))
+        edges.extend(zip(rel, rel[1:]))
+        edges.append((rel[-1], join))
+    return tuple(sorted(set(edges)))
+
+
+def edge_flow_parts(edges: Tuple[Tuple[int, int], ...], k: int,
+                    pe_alloc: Sequence[int], out_volumes: Sequence[int],
+                    intra_skips: Sequence[Tuple[int, int, int]],
+                    traffic_scale: float
+                    ) -> Tuple[List[Tuple[int, int, float]],
+                               List[Tuple[int, float]]]:
+    """Flow generators of pipeline edge k, as ``(main, siblings)``.
+
+    ``main`` holds (src_slot, dst_slot, words/interval) for the edge's own
+    stream (one word per producer PE per interval) followed by every
+    intra-segment skip tensor whose path rides this edge, diluted to the
+    edge's burst schedule (``vol / n_k`` — the linear model's convention
+    for reuse-distance > 1 traffic).  ``siblings`` holds (src_slot,
+    words/interval) for the other streams converging on the same consumer
+    (the join-aware part): while edge k moves one burst, each other edge
+    into the same slot moves ``n_d / n_k`` of its own — over a full
+    interval of k the join's ingress also absorbs ``vol_d / n_k`` of
+    stream d, and those words contend for the same ingress ports and
+    links.  Order is deterministic end to end: the ingress-port
+    arbitration is flow-order dependent, so the planner and both
+    simulator engines must derive the identical lists.
+    """
+    u, v = edges[k]
+    n_k = edge_burst_count(out_volumes[u], pe_alloc[u])
+    main: List[Tuple[int, int, float]] = [
+        (u, v, float(pe_alloc[u]) * traffic_scale)]
+    for s, t, vol in intra_skips:
+        if (u, v) in edges_on_path(edges, s, t):
+            main.append((s, t, vol / n_k))
+    siblings = [(w, out_volumes[w] * traffic_scale / n_k)
+                for w, x in edges if x == v and w != u]
+    return main, siblings
+
+
+def edge_flow_batch(placement: Placement,
+                    edges: Tuple[Tuple[int, int], ...], k: int,
+                    pe_alloc: Sequence[int], out_volumes: Sequence[int],
+                    intra_skips: Sequence[Tuple[int, int, int]],
+                    traffic_scale: float, fine: bool) -> FlowBatch:
+    """The full flow set priced/transported for pipeline edge k — the one
+    construction shared by the analytical stats and both simulator
+    engines (``edge_flow_parts`` order; converging sibling streams enter
+    through ``noc.join_flow_batch`` so the join's ingress ports arbitrate
+    across every producer region)."""
+    main, siblings = edge_flow_parts(edges, k, pe_alloc, out_volumes,
+                                     intra_skips, traffic_scale)
+    parts = [cached_flow_batch(placement, s, t, w, fine)
+             for s, t, w in main]
+    if siblings:
+        v = edges[k][1]
+        parts.append(join_flow_batch(placement,
+                                     [w for w, _ in siblings], v,
+                                     [wd for _, wd in siblings], fine))
+    return FlowBatch.concat(parts)
+
+
+def _plan_branch_segment(g: Graph, region: BranchRegion, hw: HWConfig,
+                         topology: Topology, df_fn,
+                         force_org: Optional[SpatialOrg] = None,
+                         force_gb: Optional[bool] = None,
+                         traffic_scale: float = 1.0
+                         ) -> Optional[SegmentPlan]:
+    """Price one co-placed branch region as a single pipeline segment.
+
+    Returns ``None`` when the region cannot be placed (substrate too small
+    for the branch geometry) — the DP then simply keeps the serialized
+    alternatives.  Mirrors ``_plan_segment`` with the chain generalized to
+    the region's slot DAG: granularities, NoC stats and the cost model all
+    run per *edge* (each edge's flow set including the sibling streams
+    converging on the same join — ``edge_flow_parts``).
+    """
+    seg = Segment(region.start, region.stop,
+                  tuple(tuple(i - region.start for i in br)
+                        for br in region.branches))
+    ops = g.ops[seg.start:seg.stop]
+    D = len(ops)
+    edges = _region_edges(region)
+    budget = hw.sram_bytes // max(1, D)
+    dfs = [df_fn(op, hw, i, budget) for i, op in enumerate(ops)]
+    grans = [finest_granularity(ops[u], dfs[u], ops[v], dfs[v])
+             for u, v in edges]
+
+    usable = hw.num_pes
+    slot_work = [max(1.0, op_work(op, hw)) for op in ops]
+
+    skips_all, crossing = _segment_skip_traffic(g, seg)
+    edge_set = set(edges)
+    intra_skips = tuple((s, t, vol) for s, t, vol in skips_all
+                        if (s, t) not in edge_set)
+    ext_in = ops[0].input_volume() * hw.bytes_per_word
+    ext_out = ops[-1].output_volume() * hw.bytes_per_word
+    skip_in = crossing * hw.bytes_per_word
+
+    gran_bytes = max(gr.elements for gr in grans) * hw.bytes_per_word
+    mean_pes = max(1, hw.num_pes // D)
+    if force_org is not None:
+        org = force_org
+        via_gb = force_gb if force_gb is not None else False
+    else:
+        org, via_gb = choose_spatial_org(D, gran_bytes, mean_pes, hw)
+    if any(not gr.pipelinable for gr in grans):
+        via_gb = True
+    try:
+        placement = place_branches(
+            org, slot_work, seg.branches,
+            0 if region.has_fork else None, D - 1, hw, via_gb)
+    except ValueError:
+        return None
+    # burst counts and flow volumes come from the *placed* PE counts so the
+    # NoC word streams and the interval equations describe the same grid
+    pe_alloc = [int((placement.grid == s).sum()) for s in range(D)]
+    if any(p == 0 for p in pe_alloc):
+        return None
+
+    fine = org in (SpatialOrg.FINE_STRIPED_1D, SpatialOrg.CHECKERBOARD_2D)
+
+    if via_gb:
+        per_edge_stats = None
+        worst = None
+    else:
+        out_volumes = [op.output_volume() for op in ops]
+        per_edge_stats = [
+            analyze(edge_flow_batch(placement, edges, k, pe_alloc,
+                                    out_volumes, intra_skips,
+                                    traffic_scale, fine),
+                    hw, topology)
+            for k in range(len(edges))]
+        worst = max(per_edge_stats, key=lambda st: st.worst_channel_load)
+
+    cost = segment_cost(ops, dfs, grans, pe_alloc, hw, per_edge_stats,
+                        via_gb, ext_in, ext_out, skip_in, array_pes=usable,
+                        edges=edges)
+    return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc, org,
+                       placement, worst, cost,
+                       intra_skips=intra_skips, skip_in_bytes=skip_in,
+                       traffic_scale=traffic_scale, array_pes=usable,
+                       edges=edges, branches=seg.branches)
+
+
+def _region_plans(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
+                  df_fn) -> Dict[int, List[SegmentPlan]]:
+    """Branch-segment DP candidates inside one stage-1 segment, keyed by
+    their start position.
+
+    Each useful region is offered with its fork (slot 0 feeds the branches
+    on-chip) and, for multi-branch regions, without it (so the DP may
+    leave the fork in the preceding sub-span) — and across the whole
+    stage-2 mapping space: every spatial organization, PE-to-PE or staged
+    through the global buffer.  The ``choose_spatial_org`` rule was
+    derived for linear chains; for branched layouts the candidates go to
+    the DP's Pareto selection instead, which also prices the serialized
+    alternatives, so the enumeration can only improve the guarded result.
+    Shape-identical (org, staging) pairs (e.g. the two blocked styles
+    produce one banded grid) are deduplicated by their placement grid.
+    """
+    out: Dict[int, List[SegmentPlan]] = {}
+    seen: set = set()
+    for r in branch_regions(g, seg.start, seg.stop, hw.max_depth):
+        if len(r.branches) < 2 and not r.fork_to_join:
+            continue
+        variants = [r]
+        if r.has_fork and len(r.branches) >= 2:
+            variants.append(BranchRegion(r.start + 1, r.stop, r.branches,
+                                         has_fork=False))
+        for v in variants:
+            if (v.start, v.stop, v.has_fork) in seen:
+                continue
+            seen.add((v.start, v.stop, v.has_fork))
+            if not _region_streamable(g, v):
+                continue
+            grids: set = set()
+            for org in SpatialOrg:
+                for gb in (False, True):
+                    p = _plan_branch_segment(g, v, hw, topology, df_fn,
+                                             force_org=org, force_gb=gb)
+                    if p is None:
+                        continue
+                    gkey = (p.placement.grid.tobytes(),
+                            p.placement.via_global_buffer)
+                    if gkey in grids:
+                        continue
+                    grids.add(gkey)
+                    out.setdefault(v.start, []).append(p)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # PipeOrgan: memoized cut-point DP within each heuristic segment
 # ---------------------------------------------------------------------------
 
@@ -269,10 +572,15 @@ _span_plan_cache: "collections.OrderedDict[Tuple, SegmentPlan]" = \
 
 def _span_signature(g: Graph, seg: Segment) -> Tuple:
     """Everything ``_plan_segment`` reads from a span, by value: op shapes
-    and strides, intra-span skip pairs, and boundary-crossing skip volume."""
+    and strides, the in-span input wiring (slot-relative; it decides the
+    disconnected->GB fallback), intra-span skip pairs, and the
+    boundary-crossing skip volume."""
     intra, crossing = _segment_skip_traffic(g, seg)
-    ops_sig = tuple((op.kind.value, tuple(sorted(op.dims.items())), op.stride)
-                    for op in g.ops[seg.start:seg.stop])
+    ops_sig = tuple(
+        (op.kind.value, tuple(sorted(op.dims.items())), op.stride,
+         tuple(sorted(g.index(s) - seg.start for s in op.inputs
+                      if seg.start <= g.index(s) < seg.stop)))
+        for op in g.ops[seg.start:seg.stop])
     return (ops_sig, tuple(intra), crossing)
 
 
@@ -369,17 +677,32 @@ def _pareto(points: List[Candidate]) -> List[Candidate]:
     return front
 
 
-def _dp_frontier(seg: Segment, plan_ij, max_span: int) -> List[Candidate]:
+def _dp_frontier(seg: Segment, plan_ij, max_span: int,
+                 extra: Optional[Dict[int, List[SegmentPlan]]] = None
+                 ) -> List[Candidate]:
     """Pareto frontier of all cut-point segmentations of ``seg``.
 
     best(i) = Pareto-min over j in (i, i+max_span] of cost(i, j) + best(j),
     solved right-to-left so each suffix is planned exactly once.
+
+    ``extra`` adds pre-priced transitions — the branch-parallel region
+    segments — keyed by start position: at position i the DP chooses
+    between the linear sub-spans (serializing the region) and any offered
+    co-placed alternative, which is exactly the paper's "co-place vs
+    serialize" decision, settled by the Pareto objective.
     """
     best: Dict[int, List[Candidate]] = {seg.stop: [(0.0, 0.0, ())]}
     for i in range(seg.stop - 1, seg.start - 1, -1):
         cands: List[Candidate] = []
         for j in seg.spans_from(i, max_span):
             p = plan_ij(i, j)
+            lat_ij, dram_ij = p.cost.objective
+            for lat, dram, rest in best[j]:
+                cands.append((lat_ij + lat, dram_ij + dram, (p,) + rest))
+        for p in (extra or {}).get(i, ()):
+            j = p.segment.stop
+            if j > seg.stop:
+                continue
             lat_ij, dram_ij = p.cost.objective
             for lat, dram, rest in best[j]:
                 cands.append((lat_ij + lat, dram_ij + dram, (p,) + rest))
@@ -410,22 +733,38 @@ def _sim_rerank(viable: Sequence[Candidate], hw: HWConfig,
 def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
                           topology: Topology, df_fn,
                           engine: str = "batch",
-                          sim_check: bool = False) -> List[SegmentPlan]:
+                          sim_check: bool = False,
+                          branch: bool = False) -> List[SegmentPlan]:
     plan_ij = _segment_planner(g, hw, topology, df_fn, engine=engine)
     u_lat, u_dram, u_plans = _select(_uniform_candidates(seg, plan_ij))
     if seg.depth == 1:
         return list(u_plans)
-    frontier = _dp_frontier(seg, plan_ij,
-                            min(seg.depth, hw.max_depth, DP_MAX_SPAN))
+    max_span = min(seg.depth, hw.max_depth, DP_MAX_SPAN)
+    frontier = _dp_frontier(seg, plan_ij, max_span)
     # guard: the DP result must dominate (or match) the uniform enumeration
     # on BOTH axes — strictly no-worse plans by construction
     viable = [(l, d, p) for l, d, p in frontier
               if l <= u_lat and d <= u_dram]
     viable.append((u_lat, u_dram, u_plans))
+    regions = _region_plans(g, seg, hw, topology, df_fn) if branch else {}
+    if not regions:
+        if sim_check:
+            _, _, chosen = _sim_rerank(viable, hw, topology)
+        else:
+            _, _, chosen = _select(viable)
+        return list(chosen)
+    # second guard: the branch-extended DP must dominate (or match) the
+    # *linearized* selection on BOTH axes, so co-placement is strictly
+    # never-worse than serializing the topological order
+    lin_lat, lin_dram, lin_plans = _select(viable)
+    b_frontier = _dp_frontier(seg, plan_ij, max_span, regions)
+    b_viable = [(l, d, p) for l, d, p in b_frontier
+                if l <= lin_lat and d <= lin_dram]
+    b_viable.append((lin_lat, lin_dram, lin_plans))
     if sim_check:
-        _, _, chosen = _sim_rerank(viable, hw, topology)
+        _, _, chosen = _sim_rerank(b_viable, hw, topology)
     else:
-        _, _, chosen = _select(viable)
+        _, _, chosen = _select(b_viable)
     return list(chosen)
 
 
@@ -446,13 +785,38 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
     analytical objective alone — worth its cost when plans are computed
     offline or the workload is served long enough to amortize it (see
     docs/simulator.md).
+
+    Branch-aware planning (docs/planner.md): within each stage-1 segment
+    the DP also considers co-placing every series-parallel region
+    (``graph.branch_regions``) as a single branch-parallel segment, and a
+    second guard keeps the result never-worse than the purely linearized
+    selection (``plan_pipeorgan_linear``) on both objective axes.
+    """
+    plans: List[SegmentPlan] = []
+    for s in segment_graph(g, hw):
+        plans.extend(_best_subsegmentation(g, s, hw, topology,
+                                           _pipeorgan_df_fn,
+                                           sim_check=sim_check,
+                                           branch=True))
+    return PlanResult(g.name, "pipeorgan", topology, plans)
+
+
+def plan_pipeorgan_linear(g: Graph, hw: HWConfig,
+                          topology: Topology = Topology.AMP,
+                          sim_check: bool = False) -> PlanResult:
+    """The cut-point DP *without* branch-parallel candidates.
+
+    This is exactly the pre-branch-aware planner: every series-parallel
+    region is serialized in topological order.  Kept as the guard baseline
+    (``plan_pipeorgan`` must never lose to it on either objective axis)
+    and for the co-placed-vs-serialized differential sweeps.
     """
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plans.extend(_best_subsegmentation(g, s, hw, topology,
                                            _pipeorgan_df_fn,
                                            sim_check=sim_check))
-    return PlanResult(g.name, "pipeorgan", topology, plans)
+    return PlanResult(g.name, "pipeorgan-linear", topology, plans)
 
 
 def plan_pipeorgan_uniform(g: Graph, hw: HWConfig,
@@ -595,6 +959,7 @@ def plan_layer_by_layer(g: Graph, hw: HWConfig) -> PlanResult:
 
 STRATEGIES = {
     "pipeorgan": plan_pipeorgan,
+    "pipeorgan-linear": plan_pipeorgan_linear,
     "tangram": plan_tangram_like,
     "simba": plan_simba_like,
     "layerbylayer": plan_layer_by_layer,

@@ -23,8 +23,8 @@ from .graph import Graph
 from .hwconfig import HWConfig, PAPER_HW
 from .noc import Topology, flow_batch_cache_info
 from .planner import (PlanResult, plan_layer_by_layer, plan_pipeorgan,
-                      plan_pipeorgan_uniform, plan_simba_like,
-                      plan_tangram_like)
+                      plan_pipeorgan_linear, plan_pipeorgan_uniform,
+                      plan_simba_like, plan_tangram_like)
 from .simulator import (DEFAULT_MAX_BURSTS, ValidationReport, sim_cache_info,
                         validate_plan)
 
@@ -34,6 +34,7 @@ CacheInfo = collections.namedtuple("CacheInfo",
 #: strategy name -> (plan function, default topology)
 _STRATEGY_TABLE = {
     "pipeorgan": (plan_pipeorgan, Topology.AMP),
+    "pipeorgan-linear": (plan_pipeorgan_linear, Topology.AMP),
     "pipeorgan-uniform": (plan_pipeorgan_uniform, Topology.AMP),
     "tangram": (plan_tangram_like, Topology.MESH),
     "simba": (plan_simba_like, Topology.MESH),

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -159,6 +159,153 @@ def place(org: SpatialOrg, mac_ratios: Sequence[float], hw: HWConfig,
     else:
         raise ValueError(org)
 
+    return Placement(org, grid, via_global_buffer)
+
+
+def _band_rows(work: Sequence[float], rows: int) -> List[int]:
+    """Whole-row allocation proportional to work, every entry >= 1."""
+    n = len(work)
+    if n > rows:
+        raise ValueError(f"{n} slots need more than {rows} rows")
+    total = float(sum(work)) or 1.0
+    raw = [w / total * rows for w in work]
+    r = [max(1, round(x)) for x in raw]
+    while sum(r) > rows:
+        cands = [j for j in range(n) if r[j] > 1]
+        i = max(cands, key=lambda j: (r[j] - raw[j], r[j]))
+        r[i] -= 1
+    while sum(r) < rows:
+        i = min(range(n), key=lambda j: (r[j] - raw[j], -raw[j]))
+        r[i] += 1
+    return r
+
+
+def _fill_branch_band(grid: np.ndarray, r0: int, r1: int, c0: int, c1: int,
+                      slots: Sequence[int], work: Sequence[float],
+                      org: SpatialOrg) -> None:
+    """Lay one branch's slots into its [r0:r1, c0:c1] column band.
+
+    The organization controls the *intra-branch* interleaving, mirroring
+    the whole-array styles: blocked orgs give each slot a contiguous row
+    sub-band, fine orgs interleave rows (striped) or cells (checkerboard)
+    so producer/consumer PEs of consecutive slots abut.
+    """
+    rows = r1 - r0
+    if org in (SpatialOrg.BLOCKED_1D, SpatialOrg.BLOCKED_2D):
+        alloc = _band_rows(work, rows)
+        r = r0
+        for slot, nr in zip(slots, alloc):
+            grid[r:r + nr, c0:c1] = slot
+            r += nr
+    elif org == SpatialOrg.FINE_STRIPED_1D:
+        alloc = _band_rows(work, rows)
+        g = math.gcd(*alloc) if len(alloc) > 1 else alloc[0]
+        pattern: List[int] = []
+        unit = [a // g for a in alloc]
+        for _ in range(g):
+            for slot, u in zip(slots, unit):
+                pattern.extend([slot] * u)
+        for r in range(r0, r1):
+            grid[r, c0:c1] = pattern[(r - r0) % len(pattern)]
+    elif org == SpatialOrg.CHECKERBOARD_2D:
+        cells = rows * (c1 - c0)
+        counts = allocate_pes(list(work), cells)
+        seq: List[int] = []
+        rem = list(counts)
+        while any(x > 0 for x in rem):
+            for k, slot in enumerate(slots):
+                if rem[k] > 0:
+                    seq.append(slot)
+                    rem[k] -= 1
+        k = 0
+        for r in range(r0, r1):
+            cs = (range(c0, c1) if (r - r0) % 2 == 0
+                  else range(c1 - 1, c0 - 1, -1))
+            for c in cs:
+                grid[r, c] = seq[k]
+                k += 1
+    else:
+        raise ValueError(org)
+
+
+def place_branches(org: SpatialOrg, slot_work: Sequence[float],
+                   branches: Sequence[Sequence[int]],
+                   fork_slot: Optional[int], join_slot: int, hw: HWConfig,
+                   via_global_buffer: bool = False) -> Placement:
+    """Branch-parallel placement: concurrent branches side by side.
+
+    The substrate splits into per-branch *column* bands sized by branch
+    work, so concurrent branches occupy disjoint regions instead of being
+    stacked in serialized order.  The fork and join land differently by
+    organization style:
+
+      * blocked orgs — full-width fork band on top and join band at the
+        bottom; each branch band stacks its slots as contiguous row
+        sub-bands in between (every head adjacent to the fork band, every
+        tail adjacent to the join band);
+      * fine orgs — the fork's and join's PEs are *split across* the
+        branch bands (proportionally to branch work) and interleaved with
+        the branch slots inside each band, so the producer/consumer
+        adjacency that makes fine interleavings congestion-free
+        (Sec. IV-B) holds within every branch too.
+    """
+    rows, cols = hw.pe_rows, hw.pe_cols
+    if len(branches) > cols:
+        raise ValueError(f"{len(branches)} branches exceed {cols} columns")
+    if not branches or any(len(b) == 0 for b in branches):
+        raise ValueError("every branch needs at least one slot")
+    fine = org in (SpatialOrg.FINE_STRIPED_1D, SpatialOrg.CHECKERBOARD_2D)
+    grid = np.full((rows, cols), join_slot, dtype=np.int32)
+
+    br_work = [max(1e-9, sum(slot_work[s] for s in b)) for b in branches]
+    bcols = _band_rows(br_work, cols)   # whole-column bands, one per branch
+
+    if fine:
+        # fork/join interleaved into every branch band: band b holds
+        # [fork?] + branch_b + [join], with the fork's/join's work split
+        # across bands by branch-work share.
+        c = 0
+        for bi, (b, nc) in enumerate(zip(branches, bcols)):
+            share = br_work[bi] / sum(br_work)
+            slots = list(b)
+            work = [max(1e-9, slot_work[s]) for s in b]
+            if fork_slot is not None:
+                slots = [fork_slot] + slots
+                work = [max(1e-9, slot_work[fork_slot] * share)] + work
+            slots = slots + [join_slot]
+            work = work + [max(1e-9, slot_work[join_slot] * share)]
+            _fill_branch_band(grid, 0, rows, c, c + nc, slots, work, org)
+            c += nc
+        return Placement(org, grid, via_global_buffer)
+
+    longest = max(len(b) for b in branches)
+    band_work = []
+    if fork_slot is not None:
+        band_work.append(max(1e-9, slot_work[fork_slot]))
+    band_work.append(max(1e-9, sum(br_work)))
+    band_work.append(max(1e-9, slot_work[join_slot]))
+    band_alloc = _band_rows(band_work, rows)
+    # the interior must fit the longest branch's row sub-bands
+    mid = len(band_alloc) - 2
+    while band_alloc[mid] < longest:
+        donor = max((i for i in range(len(band_alloc)) if i != mid),
+                    key=lambda i: band_alloc[i])
+        if band_alloc[donor] <= 1:
+            raise ValueError("substrate too short for branch depth")
+        band_alloc[donor] -= 1
+        band_alloc[mid] += 1
+
+    r = 0
+    if fork_slot is not None:
+        grid[: band_alloc[0], :] = fork_slot
+        r = band_alloc[0]
+    mid_rows = band_alloc[mid]
+    c = 0
+    for b, nc in zip(branches, bcols):
+        _fill_branch_band(grid, r, r + mid_rows, c, c + nc, list(b),
+                          [max(1e-9, slot_work[s]) for s in b], org)
+        c += nc
+    # rows below the interior stay at the join slot (the grid default)
     return Placement(org, grid, via_global_buffer)
 
 

@@ -1,0 +1,387 @@
+"""Branch-aware DAG planning (the series-parallel tentpole).
+
+Four layers of coverage:
+
+  1. the series-parallel decomposition and region extraction in
+     ``graph.py`` (structural unit tests; the hypothesis suite in
+     ``test_core_properties.py`` pins the algebraic properties),
+  2. branch-parallel placement geometry (``spatial.place_branches``) and
+     join-aware flows (``noc.join_flow_batch``),
+  3. the planner's co-place-vs-serialize choice: ``plan_pipeorgan`` must
+     be guarded never-worse than ``plan_pipeorgan_linear`` on BOTH
+     objective axes for every XR-bench task, and strictly better on at
+     least two branchful graphs,
+  4. the differential contract on branch-parallel segments: engine parity
+     (vectorized vs scalar) and the ``LATENCY_BAND`` ratio across every
+     topology x spatial organization, PE-to-PE and GB-staged.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.xrbench import all_tasks
+from repro.core import (LATENCY_BAND, PAPER_HW, Topology, chain_edges,
+                        edges_on_path, join_flow_batch, plan_pipeorgan,
+                        plan_pipeorgan_linear, simulate_reference,
+                        simulate_segment, validate_plan)
+from repro.core.depth import Segment
+from repro.core.graph import (BranchRegion, Graph, SPBlock, add,
+                              branch_regions, chain, conv,
+                              series_parallel_decomposition)
+from repro.core.hwconfig import HWConfig
+from repro.core.noc import analyze, cached_flow_batch
+from repro.core.planner import (_pipeorgan_df_fn, _plan_branch_segment,
+                                _plan_segment, edge_flow_parts)
+from repro.core.spatial import SpatialOrg, place_branches
+
+HW = PAPER_HW
+#: DRAM-light so the congestion verdicts are decided by transport alone
+#: (the analytical/simulated stall-chain divergence is a separate, known
+#: and documented gap — see docs/simulator.md).
+SIM_HW = HWConfig(name="sim-branch", pe_rows=8, pe_cols=8,
+                  sram_bytes=1 << 16, rf_bytes_per_pe=256,
+                  dram_bw_bytes_per_cycle=4096.0)
+
+ALL_TOPOLOGIES = list(Topology)
+ALL_ORGS = list(SpatialOrg)
+
+#: the XR-bench graphs with real branch structure (multi-input joins).
+BRANCHFUL = ("eye_segmentation", "hand_tracking", "keyword_spotting",
+             "depth_estimation", "object_detection", "plane_detection")
+
+
+def _resnet_block(name="branchy", h=16, c=8) -> Graph:
+    ops = [conv("stem", 1, h, h, c, c, r=3),
+           conv("c1", 1, h, h, c, c, r=3, inputs=("stem",)),
+           conv("c2", 1, h, h, c, c, r=3, inputs=("c1",)),
+           conv("proj", 1, h, h, c, c, r=1, inputs=("stem",)),
+           add("join", 1, h, h, c, inputs=("c2", "proj"))]
+    return Graph(name, ops)
+
+
+# ---------------------------------------------------------------------------
+# series-parallel decomposition
+# ---------------------------------------------------------------------------
+
+
+def test_chain_decomposes_to_identity():
+    g = chain("c", [conv(f"c{i}", 1, 8, 8, 4, 4) for i in range(6)])
+    blocks = series_parallel_decomposition(g)
+    assert blocks == [SPBlock(i, i + 1) for i in range(6)]
+
+
+def test_resnet_block_decomposition():
+    g = _resnet_block()
+    blocks = series_parallel_decomposition(g)
+    assert blocks == [
+        SPBlock(0, 1),                       # stem (sync)
+        SPBlock(1, 4, ((1, 2), (3,))),       # {c1,c2} || {proj}
+        SPBlock(4, 5),                       # join (sync)
+    ]
+
+
+def test_decomposition_partitions_interval():
+    for name, g in all_tasks().items():
+        blocks = series_parallel_decomposition(g)
+        covered = []
+        for b in blocks:
+            covered.extend(range(b.start, b.stop))
+            if b.is_parallel:
+                ops_in_branches = sorted(i for br in b.branches for i in br)
+                assert ops_in_branches == list(range(b.start, b.stop)), name
+        assert covered == list(range(len(g.ops))), name
+
+
+def test_branch_regions_resnet():
+    g = _resnet_block()
+    regs = branch_regions(g)
+    assert regs == [BranchRegion(0, 5, ((1, 2), (3,)), has_fork=True,
+                                 fork_to_join=False)]
+
+
+def test_branch_regions_identity_skip():
+    """b>0 ResNet blocks: single branch plus a direct fork->join edge."""
+    ops = [conv("a", 1, 8, 8, 4, 4),
+           conv("b", 1, 8, 8, 4, 4, inputs=("a",)),
+           conv("c", 1, 8, 8, 4, 4, inputs=("b",)),
+           add("j", 1, 8, 8, 4, inputs=("c", "a"))]
+    regs = branch_regions(Graph("idskip", ops))
+    assert regs == [BranchRegion(0, 4, ((1, 2),), has_fork=True,
+                                 fork_to_join=True)]
+
+
+def test_branch_regions_respect_interval_and_max_len():
+    g = _resnet_block()
+    assert branch_regions(g, 0, 5, max_len=3) == []      # 5 > 3 dropped
+    # restricting away the join leaves no complete region
+    assert all(r.stop <= 4 for r in branch_regions(g, 0, 4))
+
+
+def test_edges_on_path_chain_equals_interval_rule():
+    edges = chain_edges(6)
+    for s in range(5):
+        for t in range(s + 1, 6):
+            want = tuple((j, j + 1) for j in range(s, t))
+            assert edges_on_path(edges, s, t) == want
+
+
+def test_edges_on_path_branch_dag():
+    edges = ((0, 1), (0, 3), (1, 2), (2, 4), (3, 4))
+    assert edges_on_path(edges, 0, 2) == ((0, 1), (1, 2))
+    assert edges_on_path(edges, 3, 4) == ((3, 4),)
+    # no s->t path: falls back to the join's ingress edges
+    assert edges_on_path(edges, 1, 3) == ((0, 3),)
+
+
+# ---------------------------------------------------------------------------
+# placement + join-aware flows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("org", ALL_ORGS)
+def test_place_branches_covers_array(org):
+    for hw in (SIM_HW, HW):
+        pl = place_branches(org, [4.0, 3.0, 3.0, 1.0, 2.0],
+                            [(1, 2), (3,)], 0, 4, hw)
+        assert pl.grid.shape == (hw.pe_rows, hw.pe_cols)
+        assert set(np.unique(pl.grid)) == set(range(5))
+
+
+def test_place_branches_branches_disjoint_columns():
+    """Blocked layout: concurrent branches own disjoint column bands."""
+    pl = place_branches(SpatialOrg.BLOCKED_1D, [4.0, 3.0, 3.0, 1.0, 2.0],
+                        [(1, 2), (3,)], 0, 4, HW)
+    cols_a = set(np.argwhere(np.isin(pl.grid, [1, 2]))[:, 1])
+    cols_b = set(np.argwhere(pl.grid == 3)[:, 1])
+    assert cols_a.isdisjoint(cols_b)
+
+
+def test_place_branches_rejects_impossible():
+    tiny = HWConfig(name="tiny", pe_rows=2, pe_cols=2)
+    with pytest.raises(ValueError):
+        place_branches(SpatialOrg.BLOCKED_1D, [1.0] * 8,
+                       [tuple(range(1, 7))], 0, 7, tiny)
+
+
+def test_join_flow_batch_concatenates_in_producer_order():
+    pl = place_branches(SpatialOrg.FINE_STRIPED_1D,
+                        [4.0, 3.0, 3.0, 1.0, 2.0], [(1, 2), (3,)], 0, 4,
+                        SIM_HW)
+    a = cached_flow_batch(pl, 2, 4, 16.0, True)
+    b = cached_flow_batch(pl, 3, 4, 8.0, True)
+    union = join_flow_batch(pl, [2, 3], 4, [16.0, 8.0], True)
+    assert union.to_flows() == a.to_flows() + b.to_flows()
+    # analyzed as one batch, the join's 4 ingress ports arbitrate across
+    # both producer regions: the union's worst load can exceed per-edge
+    st_union = analyze(union, SIM_HW, Topology.MESH)
+    st_a = analyze(a, SIM_HW, Topology.MESH)
+    assert st_union.worst_channel_load >= st_a.worst_channel_load
+
+
+# ---------------------------------------------------------------------------
+# branch segment plans
+# ---------------------------------------------------------------------------
+
+
+def _region(g: Graph) -> BranchRegion:
+    return [r for r in branch_regions(g) if len(r.branches) >= 2][0]
+
+
+def test_branch_plan_structure():
+    g = _resnet_block()
+    plan = _plan_branch_segment(g, _region(g), SIM_HW, Topology.MESH,
+                                _pipeorgan_df_fn)
+    assert plan is not None
+    assert plan.segment.is_branched
+    assert plan.edges == ((0, 1), (0, 3), (1, 2), (2, 4), (3, 4))
+    assert len(plan.granularities) == len(plan.edges)
+    assert plan.segment.depth == 5 == len(plan.ops)
+    # placed PE counts and burst metadata are consistent
+    assert sum(plan.pe_alloc) == SIM_HW.num_pes
+    assert all(p >= 1 for p in plan.pe_alloc)
+
+
+def test_edge_flow_parts_includes_siblings_at_join():
+    g = _resnet_block()
+    plan = _plan_branch_segment(g, _region(g), SIM_HW, Topology.MESH,
+                                _pipeorgan_df_fn)
+    edges = plan.pipeline_edges
+    outv = [op.output_volume() for op in plan.ops]
+    k = edges.index((2, 4))
+    main, siblings = edge_flow_parts(edges, k, plan.pe_alloc, outv,
+                                     plan.intra_skips, 1.0)
+    # own stream + the sibling slot-3 stream diluted to this edge's bursts
+    assert main[0][:2] == (2, 4)
+    assert [s for s, _ in siblings] == [3]
+    n_k = plan.cost.intervals[k]
+    assert siblings[0][1] == pytest.approx(outv[3] / n_k)
+    # a mid-branch edge has no siblings
+    main1, siblings1 = edge_flow_parts(edges, edges.index((1, 2)),
+                                       plan.pe_alloc, outv,
+                                       plan.intra_skips, 1.0)
+    assert siblings1 == []
+
+
+def test_interleaved_independent_chains_not_co_placed():
+    """Two independent chains interleaved in topological order form a
+    parallel block, but there is no fork feeding them — fabricating
+    fork→head streams would price data movement the graph never performs,
+    so the region is rejected for co-placement."""
+    from repro.core.planner import _region_plans, _region_streamable
+
+    ops = [conv("f", 1, 8, 8, 4, 4),
+           conv("a0", 1, 8, 8, 4, 4, inputs=("f",)),
+           conv("b0", 1, 8, 8, 4, 4),            # independent source
+           conv("a1", 1, 8, 8, 4, 4, inputs=("a0",)),
+           conv("b1", 1, 8, 8, 4, 4, inputs=("b0",)),
+           add("j", 1, 8, 8, 4, inputs=("a1", "b1"))]
+    g = Graph("interleaved", ops)
+    for r in branch_regions(g):
+        if len(r.branches) >= 2 and r.has_fork:
+            assert not _region_streamable(g, r)
+    plans = _region_plans(g, Segment(0, len(ops)), SIM_HW, Topology.MESH,
+                          _pipeorgan_df_fn)
+    for cand in (p for ps in plans.values() for p in ps):
+        base = cand.segment.start
+        if cand.segment.branches and base == 0:
+            # any offered variant must be the forkless one (heads stream
+            # their external inputs; no fabricated fork edge)
+            assert all((0, br[0]) not in cand.edges
+                       for br in cand.segment.branches)
+
+
+def test_branch_cost_dag_reduces_to_chain():
+    """segment_cost(edges=chain) must reproduce the classic chain path."""
+    g = chain("eq", [conv(f"c{i}", 1, 16, 16, 8, 8, r=3) for i in range(4)])
+    base = _plan_segment(g, Segment(0, 4), SIM_HW, Topology.MESH,
+                         _pipeorgan_df_fn, SpatialOrg.BLOCKED_1D, False)
+    from repro.core.pipeline_model import segment_cost
+    ext_in = g.ops[0].input_volume() * SIM_HW.bytes_per_word
+    ext_out = g.ops[-1].output_volume() * SIM_HW.bytes_per_word
+    dag = segment_cost(base.ops, base.dataflows, base.granularities,
+                       base.pe_alloc, SIM_HW,
+                       [base.noc] * 3 if base.noc else None,
+                       base.placement.via_global_buffer, ext_in, ext_out,
+                       0.0, array_pes=base.array_pes, edges=chain_edges(4))
+    # same interval structure; latency agrees to float-reassociation noise
+    assert dag.intervals == base.cost.intervals
+    assert dag.dram_bytes == base.cost.dram_bytes
+    assert dag.latency_cycles == pytest.approx(
+        base.cost.latency_cycles, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the guard: co-placement never loses to serialization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("task", sorted(all_tasks()))
+def test_branch_aware_never_worse_than_linearized(task):
+    g = all_tasks()[task]
+    br = plan_pipeorgan(g, HW, Topology.AMP)
+    lin = plan_pipeorgan_linear(g, HW, Topology.AMP)
+    assert br.latency_cycles <= lin.latency_cycles * (1 + 1e-9), task
+    assert br.dram_bytes <= lin.dram_bytes * (1 + 1e-9), task
+    # both cover every op exactly once
+    for plan in (br, lin):
+        assert sum(s.segment.depth for s in plan.segments) == len(g.ops)
+    # linearized plans never contain branch segments
+    assert all(not s.edges for s in lin.segments), task
+
+
+def test_branch_aware_strictly_better_on_branchful_graphs():
+    """The tentpole's payoff: co-placement must strictly improve at least
+    two branchful XR-bench workloads on the (latency, DRAM) objective."""
+    improved = []
+    for task in BRANCHFUL:
+        g = all_tasks()[task]
+        br = plan_pipeorgan(g, HW, Topology.AMP)
+        lin = plan_pipeorgan_linear(g, HW, Topology.AMP)
+        if (br.latency_cycles < lin.latency_cycles * (1 - 1e-9)
+                or br.dram_bytes < lin.dram_bytes * (1 - 1e-9)):
+            improved.append(task)
+    assert len(improved) >= 2, f"only improved: {improved}"
+
+
+def test_branch_aware_plans_contain_branch_segments():
+    improved = 0
+    for task in BRANCHFUL:
+        g = all_tasks()[task]
+        br = plan_pipeorgan(g, HW, Topology.AMP)
+        improved += any(s.edges for s in br.segments)
+    assert improved >= 2
+
+
+def test_disconnected_span_staged_through_gb():
+    """A sub-span whose op has no in-span producer cannot fine-pipeline:
+    the serialized execution stages through the global buffer (the
+    motivation for co-placing the region instead)."""
+    g = _resnet_block()
+    # span (c2, proj): proj's input (stem) predates the span
+    p = _plan_segment(g, Segment(2, 4), HW, Topology.AMP, _pipeorgan_df_fn,
+                      None, None)
+    assert p.placement.via_global_buffer
+    # span (c1, c2) is a real producer->consumer stream
+    p2 = _plan_segment(g, Segment(1, 3), HW, Topology.AMP, _pipeorgan_df_fn,
+                       None, None)
+    assert not p2.placement.via_global_buffer
+
+
+# ---------------------------------------------------------------------------
+# the differential contract on branch segments
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("org", ALL_ORGS)
+@pytest.mark.parametrize("via_gb", [False, True])
+def test_branch_differential_sweep(topology, org, via_gb):
+    """Band + verdict agreement + engine parity for branch-parallel
+    segments across the full topology x organization grid."""
+    g = _resnet_block()
+    plan = _plan_branch_segment(g, _region(g), SIM_HW, topology,
+                                _pipeorgan_df_fn, force_org=org,
+                                force_gb=via_gb)
+    assert plan is not None
+    vec = simulate_segment(plan, SIM_HW, topology)
+    ref = simulate_reference(plan, SIM_HW, topology)
+
+    # scalar-reference parity (the criterion's branch-segment extension)
+    assert vec.link_loads == ref.link_loads
+    assert vec.peak_link_load == ref.peak_link_load
+    assert vec.pair_congested == ref.pair_congested
+    assert vec.n_bursts == ref.n_bursts
+    assert vec.latency_cycles == pytest.approx(ref.latency_cycles,
+                                               rel=1e-6)
+
+    # the declared error band holds for branch-parallel segments
+    ratio = plan.cost.latency_cycles / vec.latency_cycles
+    lo, hi = LATENCY_BAND
+    assert lo <= ratio <= hi, (
+        f"branch segment ratio {ratio:.3f} outside [{lo}, {hi}]")
+
+    # congestion verdicts agree (DRAM-light sweep; the stall-chain
+    # divergence documented in docs/simulator.md needs heavy DRAM)
+    assert plan.cost.congested == vec.congested
+
+    # byte accounting is shared by design
+    assert vec.dram_bytes == pytest.approx(plan.cost.dram_bytes, rel=1e-12)
+
+
+def test_branch_plan_validates_on_paper_hw():
+    """A real branchful workload's full plan (branch segments included)
+    passes `validate_plan` end to end on the 32x32 paper substrate."""
+    g = all_tasks()["object_detection"]
+    plan = plan_pipeorgan(g, HW, Topology.AMP)
+    assert any(s.edges for s in plan.segments)
+    report = validate_plan(plan, HW)
+    assert report.latency_within_band, report.summary()
+
+
+def test_branch_simulation_deterministic():
+    g = _resnet_block()
+    plan = _plan_branch_segment(g, _region(g), SIM_HW, Topology.AMP,
+                                _pipeorgan_df_fn)
+    a = simulate_segment(plan, SIM_HW, Topology.AMP, max_bursts=32)
+    b = simulate_segment(plan, SIM_HW, Topology.AMP, max_bursts=32)
+    assert a.latency_cycles == b.latency_cycles
+    assert a.link_loads == b.link_loads

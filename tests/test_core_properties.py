@@ -8,11 +8,14 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+import dataclasses  # noqa: E402
+
 from repro.core import PAPER_HW  # noqa: E402
 from repro.core.dataflow import choose_dataflow  # noqa: E402
 from repro.core.depth import segment_graph  # noqa: E402
 from repro.core.granularity import finest_granularity  # noqa: E402
-from repro.core.graph import chain, conv  # noqa: E402
+from repro.core.graph import (Graph, branch_regions, chain, conv,  # noqa: E402
+                              series_parallel_decomposition)
 from repro.core.noc import Topology as T, route  # noqa: E402
 from repro.core.spatial import allocate_pes  # noqa: E402
 
@@ -48,6 +51,98 @@ def test_allocate_pes_exact_and_positive(ratios, num):
     alloc = allocate_pes(ratios, num)
     assert sum(alloc) == num
     assert all(a >= 1 for a in alloc)
+
+
+# ---------------------------------------------------------------------------
+# series-parallel decomposition (branch-aware planning tentpole)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_dags(draw):
+    """A topologically ordered DAG: a chain spine with random extra edges
+    (skips, fork/join wiring) layered on top."""
+    n = draw(st.integers(2, 14))
+    ops = [conv(f"c{i}", 1, 8, 8, 4, 4) for i in range(n)]
+    wired = []
+    for i, op in enumerate(ops):
+        if i == 0:
+            wired.append(op)
+            continue
+        # at least one input from an earlier op; maybe extra fan-in
+        n_in = draw(st.integers(1, min(3, i)))
+        srcs = draw(st.lists(st.integers(0, i - 1), min_size=n_in,
+                             max_size=n_in, unique=True))
+        wired.append(dataclasses.replace(
+            op, inputs=tuple(f"c{s}" for s in sorted(srcs))))
+    return Graph("rand", wired)
+
+
+@given(random_dags())
+@settings(max_examples=60, deadline=None)
+def test_sp_decomposition_partitions_ops(g):
+    """Every op lands in exactly one block, and inside a parallel block in
+    exactly one branch; blocks tile the interval in topological order."""
+    blocks = series_parallel_decomposition(g)
+    pos = 0
+    for b in blocks:
+        assert b.start == pos
+        assert b.stop > b.start
+        if b.branches:
+            seen = sorted(i for br in b.branches for i in br)
+            assert seen == list(range(b.start, b.stop))
+            for br in b.branches:
+                assert list(br) == sorted(br)  # topological order kept
+        else:
+            assert b.stop == b.start + 1       # series block = one sync op
+        pos = b.stop
+    assert pos == len(g.ops)
+
+
+@given(random_dags())
+@settings(max_examples=60, deadline=None)
+def test_sp_branches_carry_no_cross_edges(g):
+    """Two ops in different branches of one block are never connected."""
+    blocks = series_parallel_decomposition(g)
+    for b in blocks:
+        br_of = {i: bi for bi, br in enumerate(b.branches) for i in br}
+        for op in g.ops:
+            ci = g.index(op.name)
+            if ci not in br_of:
+                continue
+            for s in op.inputs:
+                pi = g.index(s)
+                if pi in br_of:
+                    assert br_of[pi] == br_of[ci]
+
+
+@given(random_dags())
+@settings(max_examples=60, deadline=None)
+def test_branch_regions_are_contiguous_and_ordered(g):
+    for r in branch_regions(g):
+        assert 0 <= r.start < r.stop <= len(g.ops)
+        interior = sorted(i for br in r.branches for i in br)
+        lo = r.start + 1 if r.has_fork else r.start
+        assert interior == list(range(lo, r.join))
+        # the join consumes at least one op of the region (the fork or an
+        # interior op — every edge jumping the interior must land on the
+        # join, by the sync-point construction)
+        feeds = set(interior)
+        if r.has_fork:
+            feeds.add(r.start)
+        assert any(g.index(s) in feeds for s in g.ops[r.join].inputs)
+
+
+@given(st.integers(2, 20))
+@settings(max_examples=30, deadline=None)
+def test_sp_chain_degrades_to_identity(n):
+    """A pure chain's decomposition is the identity: one series block per
+    op, no parallel regions anywhere."""
+    g = chain("c", [conv(f"c{i}", 1, 8, 8, 4, 4) for i in range(n)])
+    blocks = series_parallel_decomposition(g)
+    assert [(b.start, b.stop, b.branches) for b in blocks] == \
+        [(i, i + 1, ()) for i in range(n)]
+    assert branch_regions(g) == []
 
 
 @given(st.integers(1, 31), st.integers(1, 31))

@@ -43,6 +43,10 @@ def _snapshot_plan(plan) -> dict:
                 "latency_cycles": s.cost.latency_cycles,
                 "dram_bytes": s.cost.dram_bytes,
                 "congested": s.cost.congested,
+                # branch-parallel segments: the co-placed branch groups and
+                # the explicit pipeline slot DAG ([] = linear chain)
+                "branches": [list(b) for b in s.branches],
+                "edges": [list(e) for e in s.edges],
             }
             for s in plan.segments
         ],
@@ -76,7 +80,7 @@ def test_plan_matches_golden_snapshot(task):
     for i, (gs, ws) in enumerate(zip(got["segments"], want["segments"])):
         ctx = f"{task} segment {i} [{ws['start']},{ws['stop']})"
         for key in ("start", "stop", "depth", "org", "via_global_buffer",
-                    "congested"):
+                    "congested", "branches", "edges"):
             assert gs[key] == ws[key], (
                 f"{ctx}: {key} changed {ws[key]!r} -> {gs[key]!r}")
         for key in ("latency_cycles", "dram_bytes"):

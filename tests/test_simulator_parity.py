@@ -110,6 +110,33 @@ def test_engines_agree_with_skip_connections():
         _assert_parity(vec, ref)
 
 
+def test_engines_agree_on_branch_parallel_segment():
+    """Branch-parallel segments (explicit slot DAG, fork multicast, join
+    convergence) run the same generalized recurrences in both engines —
+    parity must hold exactly like on chains."""
+    from repro.core.graph import Graph, branch_regions
+    from repro.core.planner import _plan_branch_segment
+
+    ops = [conv("stem", 1, 16, 16, 8, 8, r=3),
+           conv("c1", 1, 16, 16, 8, 8, r=3, inputs=("stem",)),
+           conv("c2", 1, 16, 16, 8, 8, r=3, inputs=("c1",)),
+           conv("proj", 1, 16, 16, 8, 8, r=1, inputs=("stem",)),
+           add("join", 1, 16, 16, 8, inputs=("c2", "proj"))]
+    g = Graph("branchy", ops)
+    region = [r for r in branch_regions(g) if len(r.branches) >= 2][0]
+    for topology in ALL_TOPOLOGIES:
+        for org in ALL_ORGS:
+            plan = _plan_branch_segment(g, region, SIM_HW, topology,
+                                        _pipeorgan_df_fn, force_org=org)
+            assert plan is not None and plan.edges
+            for max_bursts in (8, 64):
+                vec = simulate_segment(plan, SIM_HW, topology,
+                                       max_bursts=max_bursts)
+                ref = simulate_reference(plan, SIM_HW, topology,
+                                        max_bursts=max_bursts)
+                _assert_parity(vec, ref)
+
+
 def test_engines_agree_on_paper_substrate():
     """One full-size (32x32) deep segment — the sim_speed benchmark shape."""
     g = chain("deep", [conv(f"c{i}", 1, 32, 32, 16, 16, r=3)
