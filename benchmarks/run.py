@@ -57,6 +57,10 @@ def _derived(name: str, rows) -> str:
             tot = [r for r in rows if r.get("topology") == "ALL"][0]
             return (f"geomean_speedup_depth8={tot['geomean_speedup_depth8']};"
                     f"min_depth8={tot['min_speedup_depth8']}")
+        if name == "plan_artifact":
+            gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
+            return (f"load_speedup_vs_replan={gm['load_speedup_vs_replan']};"
+                    f"roundtrip_identical={gm['roundtrip_identical']}")
         if name == "amp_ablation":
             amp = [r for r in rows if r["topology"] == "amp"
                    and r["strategy"] == "tangram-like"][0]

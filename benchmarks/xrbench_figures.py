@@ -12,7 +12,7 @@ import time
 from typing import Dict, List
 
 from repro.configs.xrbench import all_tasks
-from repro.core import PAPER_HW, Planner, Topology, get_planner
+from repro.core import PAPER_HW, PlanRequest, Planner, Topology, get_planner
 from repro.core.dataflow import (achieved_arithmetic_intensity,
                                  best_case_arithmetic_intensity,
                                  choose_dataflow)
@@ -23,8 +23,8 @@ _PLANNER = get_planner()
 
 
 def _plan(g, strategy: str = "pipeorgan", topology: Topology = None):
-    return _PLANNER.plan(g, hw=PAPER_HW, topology=topology,
-                         strategy=strategy)
+    return _PLANNER.plan(PlanRequest(g, hw=PAPER_HW, topology=topology,
+                                     strategy=strategy))
 
 
 def fig05_aw_ratios() -> List[dict]:
@@ -392,9 +392,10 @@ def planner_speed() -> List[dict]:
         t0 = time.perf_counter()
         plan_pipeorgan_reference(g, PAPER_HW, Topology.AMP)
         t_ref = time.perf_counter() - t0
-        warm_planner.plan(g, PAPER_HW, Topology.AMP)
+        request = PlanRequest(g, hw=PAPER_HW, topology=Topology.AMP)
+        warm_planner.plan(request)
         t0 = time.perf_counter()
-        warm_planner.plan(g, PAPER_HW, Topology.AMP)
+        warm_planner.plan(request)
         t_warm = time.perf_counter() - t0
         t_dp_total += t_dp
         t_ref_total += t_ref
@@ -418,6 +419,64 @@ def planner_speed() -> List[dict]:
     return rows
 
 
+def plan_artifact() -> List[dict]:
+    """Artifact persistence vs re-planning, per XR-bench task: the cost of
+    ``PlanArtifact`` save + ``PlanStore`` load against a cold re-plan (all
+    cross-call planner caches dropped — the offline-plan -> online-serve
+    trade the store exists to win).  Also asserts the round trip is
+    field-identical, so the benchmark doubles as an end-to-end artifact
+    smoke test on every run."""
+    import tempfile
+
+    import repro.core.planner as planner_mod
+    from repro.core import (PlanStore, flow_batch_cache_clear, plan_diffs,
+                            plan_pipeorgan)
+
+    def _time(fn, reps=3):
+        best = float("inf")
+        out = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    rows = []
+    speedups = []
+    with tempfile.TemporaryDirectory() as tmp:
+        store = PlanStore(tmp)
+        for name, g in all_tasks().items():
+            request = PlanRequest(g, hw=PAPER_HW, topology=Topology.AMP)
+
+            def replan():
+                planner_mod._pair_traffic.cache_clear()
+                planner_mod._cached_place.cache_clear()
+                planner_mod._span_plan_cache.clear()
+                flow_batch_cache_clear()
+                return plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+            t_plan, plan = _time(replan, reps=1)
+            t_save, path = _time(lambda: store.save(request, plan))
+            t_load, loaded = _time(lambda: store.load(request))
+            identical = not plan_diffs(plan, loaded)
+            speedup = t_plan / max(t_load, 1e-9)
+            speedups.append(speedup)
+            rows.append({
+                "task": name,
+                "replan_cold_s": round(t_plan, 4),
+                "save_ms": round(t_save * 1e3, 3),
+                "load_ms": round(t_load * 1e3, 3),
+                "artifact_kb": round(path.stat().st_size / 1024, 1),
+                "load_speedup_vs_replan": round(speedup, 1),
+                "roundtrip_identical": identical,
+            })
+    gm = math.exp(sum(math.log(x) for x in speedups) / len(speedups))
+    rows.append({"task": "GEOMEAN",
+                 "load_speedup_vs_replan": round(gm, 1),
+                 "roundtrip_identical": all(r["roundtrip_identical"]
+                                            for r in rows)})
+    return rows
+
+
 FIGURES = {
     "fig05_aw_ratios": fig05_aw_ratios,
     "fig06_skips": fig06_skips,
@@ -432,4 +491,5 @@ FIGURES = {
     "simulator_validation": simulator_validation,
     "planner_speed": planner_speed,
     "sim_speed": sim_speed,
+    "plan_artifact": plan_artifact,
 }

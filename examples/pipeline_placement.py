@@ -31,9 +31,10 @@ print("  TP-collective-dominated ->",
 # chip scale: the same organization question, answered end-to-end by the
 # Planner facade (spatial org + depth chosen per segment by the DP mapper)
 from repro.configs.xrbench import all_tasks
-from repro.core import PAPER_HW, get_planner
+from repro.core import PAPER_HW, PlanRequest, get_planner
 
-plan = get_planner().plan(all_tasks()["hand_tracking"], hw=PAPER_HW)
+plan = get_planner().plan(PlanRequest(all_tasks()["hand_tracking"],
+                                      hw=PAPER_HW))
 print("\nchip-scale plan (hand_tracking via Planner facade):")
 for s in plan.segments[:8]:
     org = s.org.value if s.org is not None else "-"
@@ -67,7 +68,8 @@ def render_substrate(seg, downsample=2):
     print("    pipeline edges:", " ".join(f"{u}->{v}" for u, v in seg.edges))
 
 
-branchy = get_planner().plan(all_tasks()["object_detection"], hw=PAPER_HW)
+branchy = get_planner().plan(PlanRequest(all_tasks()["object_detection"],
+                                         hw=PAPER_HW))
 branch_segs = [s for s in branchy.segments if s.edges]
 print(f"\nbranch co-placement (object_detection: "
       f"{len(branch_segs)} branch-parallel segment(s)):")

@@ -1,16 +1,23 @@
 """Quickstart: plan a model with PipeOrgan and inspect the decisions.
 
+Planning is a *query*: a ``PlanRequest`` names the workload, hardware,
+topology and an ``Objective`` over (latency, DRAM, energy); the planner
+answers from its cut-point DP's Pareto frontier.  The default objective
+is latency-first — swap in ``min_dram()`` (or a ``Constraint``) and the
+same frontier yields a different plan.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs.xrbench import eye_segmentation
-from repro.core import (PAPER_HW, Topology, plan_pipeorgan,
-                        plan_tangram_like)
+from repro.core import (PAPER_HW, PlanRequest, Topology, get_planner,
+                        min_dram, plan_tangram_like)
 
 graph = eye_segmentation()          # RITNet-style DAG (77 ops, dense skips)
 print(f"model: {graph.name} | ops={len(graph.ops)} "
       f"skips={len(graph.skip_edges())}")
 
-plan = plan_pipeorgan(graph, PAPER_HW, Topology.AMP)
+planner = get_planner()
+plan = planner.plan(PlanRequest(graph, hw=PAPER_HW, topology=Topology.AMP))
 print(f"\nPipeOrgan plan ({len(plan.segments)} segments):")
 for seg in plan.segments[:8]:
     names = [o.name for o in seg.ops]
@@ -26,3 +33,10 @@ print(f"\nlatency:  pipeorgan={plan.latency_cycles:.3e} cycles | "
 print(f"DRAM:     pipeorgan={plan.dram_bytes:.3e} B | "
       f"tangram-like={baseline.dram_bytes:.3e}  "
       f"(ratio {plan.dram_bytes / baseline.dram_bytes:.2f})")
+
+# the same frontier, a different objective: minimize DRAM traffic
+frugal = planner.plan(PlanRequest(graph, hw=PAPER_HW, topology=Topology.AMP,
+                                  objective=min_dram()))
+print(f"\nmin-DRAM objective: {frugal.dram_bytes:.3e} B "
+      f"({frugal.dram_bytes / plan.dram_bytes:.2f}x of latency-first) at "
+      f"{frugal.latency_cycles:.3e} cycles")

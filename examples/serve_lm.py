@@ -1,6 +1,15 @@
-"""Serve a small model with batched greedy decoding + int8 KV cache.
+"""Serve a small model with batched greedy decoding + int8 KV cache,
+pricing the decode step from a persisted PipeOrgan plan artifact.
 
-    PYTHONPATH=src python examples/serve_lm.py --tokens 32 --kv-quant
+The offline-plan -> online-serve path: the first run ("warm-up") plans
+the model's decode graph once and files the plan as a ``PlanArtifact``
+in a ``PlanStore`` directory; every later run admits the artifact with
+ZERO planner invocations — asserted below via the facade's cache
+counters — which is how a serving fleet starts hot without paying the
+planner at boot.
+
+    PYTHONPATH=src python examples/serve_lm.py --tokens 32 --kv-quant \
+        [--plan-store DIR]
 """
 import argparse
 import dataclasses
@@ -10,7 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core import PAPER_HW, PlanRequest, PlanStore, Topology, get_planner
 from repro.models import init_cache, init_model
+from repro.runtime.serve_loop import decode_graph
 from repro.runtime.steps import make_serve_step
 
 
@@ -20,11 +31,33 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--plan-store", default=".pipeorgan_plans",
+                    help="directory of serialized plan artifacts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)  # reduced config on CPU
     if args.kv_quant:
         cfg = dataclasses.replace(cfg, kv_quant=True)
+
+    # -- accelerator plan: artifact first, planner only on a cold store ----
+    planner = get_planner()
+    store = PlanStore(args.plan_store)
+    request = PlanRequest(decode_graph(cfg), hw=PAPER_HW,
+                          topology=Topology.AMP)
+    plan = store.load(request)
+    if plan is None:                       # warm-up: plan once, persist
+        plan = planner.plan(request)
+        path = store.save(request, plan)
+        print(f"warm-up: planned and saved artifact -> {path}")
+    misses_before = planner.cache_info().misses
+    served = store.load(request)           # the serving path
+    assert served is not None
+    assert planner.cache_info().misses == misses_before, \
+        "serving made a planner invocation despite a warm store"
+    print(f"decode plan from store ({store.info()[0]} store hits, "
+          f"0 planner invocations): {served.latency_cycles:.3e} cycles"
+          f"/token, {served.dram_bytes:.3e} DRAM B/token")
+
     params = init_model(jax.random.PRNGKey(0), cfg)
     step = jax.jit(make_serve_step(cfg))
 

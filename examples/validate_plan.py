@@ -10,14 +10,16 @@ fill/drain) and checks the declared error-band contract segment by segment.
 import sys
 
 from repro.configs.xrbench import all_tasks
-from repro.core import LATENCY_BAND, PAPER_HW, Topology, get_planner
+from repro.core import (LATENCY_BAND, PAPER_HW, PlanRequest, Topology,
+                        get_planner)
 
 task = sys.argv[1] if len(sys.argv) > 1 else "keyword_spotting"
 g = all_tasks()[task]
 
 planner = get_planner()
-plan = planner.plan(g, hw=PAPER_HW, topology=Topology.AMP)
-report = planner.validate(plan, PAPER_HW)
+request = PlanRequest(g, hw=PAPER_HW, topology=Topology.AMP)
+plan = planner.plan(request)
+report = planner.validate(request)   # plans through the same cache entry
 
 print(f"{task}: {len(report.segments)} segments, "
       f"band {LATENCY_BAND[0]}..{LATENCY_BAND[1]} (analytical/simulated)\n")

@@ -5,7 +5,7 @@ facade (plans are LRU-cached, so re-running a task/topology is free).
     PYTHONPATH=src python examples/xrbench_planner.py
 """
 from repro.configs.xrbench import all_tasks
-from repro.core import PAPER_HW, Topology, get_planner
+from repro.core import PAPER_HW, PlanRequest, Topology, get_planner
 
 planner = get_planner()
 
@@ -15,7 +15,7 @@ for name, g in all_tasks().items():
     row = [name]
     for topo in (Topology.MESH, Topology.AMP, Topology.TORUS,
                  Topology.FLATTENED_BUTTERFLY):
-        plan = planner.plan(g, hw=PAPER_HW, topology=topo)
+        plan = planner.plan(PlanRequest(g, hw=PAPER_HW, topology=topo))
         row.append(f"{plan.latency_cycles:.3e}")
     print(f"{row[0]:22s} {row[1]:>12s} {row[2]:>12s} {row[3]:>12s} "
           f"{row[4]:>12s}")

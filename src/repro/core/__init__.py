@@ -12,7 +12,12 @@ Stage 2 — HW mapping and NoC architecture:
                   (vectorized `analyze` + scalar `analyze_reference`)
   pipeline_model.py  Fig. 3 interval latency + energy model
   planner.py      memoized cut-point DP flow + TANGRAM/SIMBA baselines
-  planner_service.py  `Planner` facade with an LRU plan cache + `validate`
+  plan_api.py     declarative planning API: `PlanRequest`, `Objective`/
+                  `Constraint`, the `register_strategy()` registry
+  artifact.py     `PlanArtifact` (lossless JSON plan persistence) and the
+                  `PlanStore` directory layer (offline-plan -> serve)
+  planner_service.py  `Planner` facade: request-keyed LRU plan cache,
+                  `validate`, optional PlanStore read-through
   simulator.py    event-driven pipeline simulator — the differential-
                   testing oracle for the analytical model above
 """
@@ -28,12 +33,20 @@ from .noc import (Flow, FlowBatch, Topology, TrafficStats, analyze,
                   flow_batch_cache_info, join_flow_batch, multicast_flow_batch,
                   pair_flow_batch, segment_flows)
 from .pipeline_model import SegmentCost, chain_edges, segment_cost
+from .plan_api import (Constraint, DEFAULT_OBJECTIVE, METRICS, Objective,
+                       PlanAPIDeprecationWarning, PlanRequest, StrategySpec,
+                       Term, cache_registry, get_strategy, graph_fingerprint,
+                       latency_first, min_dram, min_energy, register_cache,
+                       register_strategy, strategy_names, unregister_cache,
+                       unregister_strategy)
 from .planner import (PlanResult, SegmentPlan, STRATEGIES, edges_on_path,
                       plan_layer_by_layer, plan_pipeorgan,
                       plan_pipeorgan_linear, plan_pipeorgan_reference,
                       plan_pipeorgan_uniform, plan_simba_like,
                       plan_tangram_like)
-from .planner_service import CacheInfo, Planner, get_planner, graph_fingerprint
+from .artifact import (PLAN_SCHEMA_VERSION, PlanArtifact, PlanSchemaError,
+                       PlanStore, plan_diffs, plan_from_dict, plan_to_dict)
+from .planner_service import CacheInfo, Planner, get_planner
 from .simulator import (DEFAULT_MAX_BURSTS, LATENCY_BAND,
                         LATENCY_BAND_UNCONGESTED, SimReport, SegmentSimReport,
                         SegmentValidation, ValidationReport, sim_cache_clear,
@@ -55,6 +68,13 @@ __all__ = [
     "flow_batch_cache_info", "join_flow_batch", "multicast_flow_batch",
     "pair_flow_batch", "segment_flows",
     "SegmentCost", "chain_edges", "segment_cost",
+    "Constraint", "DEFAULT_OBJECTIVE", "METRICS", "Objective",
+    "PlanAPIDeprecationWarning", "PlanRequest", "StrategySpec", "Term",
+    "cache_registry", "get_strategy", "latency_first", "min_dram",
+    "min_energy", "register_cache", "register_strategy", "strategy_names",
+    "unregister_cache", "unregister_strategy",
+    "PLAN_SCHEMA_VERSION", "PlanArtifact", "PlanSchemaError", "PlanStore",
+    "plan_diffs", "plan_from_dict", "plan_to_dict",
     "PlanResult", "SegmentPlan", "STRATEGIES", "edges_on_path",
     "plan_layer_by_layer", "plan_pipeorgan", "plan_pipeorgan_linear",
     "plan_pipeorgan_reference", "plan_pipeorgan_uniform", "plan_simba_like",

@@ -48,9 +48,18 @@ class SegmentCost:
 
     @property
     def objective(self) -> "Tuple[float, float]":
-        """(latency_cycles, dram_bytes) — the planner's selection key:
-        latency first, DRAM as the tiebreak axis."""
+        """(latency_cycles, dram_bytes) — the DP's Pareto axes.  The
+        frontier is pruned on these two; richer selection rules
+        (``plan_api.Objective``) rank the surviving points by
+        ``metrics``."""
         return (self.latency_cycles, self.dram_bytes)
+
+    @property
+    def metrics(self) -> "dict":
+        """The objective-facing metric dict (``plan_api.METRICS``)."""
+        return {"latency_cycles": self.latency_cycles,
+                "dram_bytes": self.dram_bytes,
+                "energy": self.total_energy}
 
 
 def op_work(op: Op, hw: HWConfig) -> float:

@@ -27,6 +27,7 @@ Baselines (Sec. V-C):
 from __future__ import annotations
 
 import collections
+import collections.abc
 import dataclasses
 import functools
 import math
@@ -34,6 +35,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .dataflow import Dataflow, choose_dataflow
 from .depth import Segment, segment_graph
+from .plan_api import (Constraint, DEFAULT_OBJECTIVE, Objective,
+                       register_cache, register_strategy)
 from .graph import (BranchRegion, COMPLEX_KINDS, Graph, Op, OpKind,
                     branch_regions)
 from .granularity import Granularity, finest_granularity
@@ -110,6 +113,11 @@ class PlanResult:
     @property
     def compute_lower_bound(self) -> float:
         return sum(s.cost.compute_cycles for s in self.segments)
+
+    def metrics(self) -> Dict[str, float]:
+        """The objective-facing totals (``plan_api.METRICS``)."""
+        return {"latency_cycles": self.latency_cycles,
+                "dram_bytes": self.dram_bytes, "energy": self.energy}
 
     def depth_labels(self) -> List[int]:
         labels: List[int] = []
@@ -656,13 +664,24 @@ def _uniform_candidates(seg: Segment, plan_ij) -> List[Candidate]:
     return cands
 
 
-def _select(cands: Sequence[Candidate]) -> Candidate:
-    """Objective: latency first; among candidates within 25% of the best
-    latency, prefer the lowest DRAM traffic (the paper optimizes both
-    performance and energy — Fig. 13 / Fig. 14)."""
-    best_lat = min(c[0] for c in cands)
-    viable = [c for c in cands if c[0] <= 1.25 * best_lat]
-    return min(viable, key=lambda c: (c[1], c[0]))
+def _cand_metrics(c: Candidate) -> Dict[str, float]:
+    """The objective-facing metrics of one candidate segmentation."""
+    return {"latency_cycles": c[0], "dram_bytes": c[1],
+            "energy": sum(p.cost.total_energy for p in c[2])}
+
+
+def _select(cands: Sequence[Candidate],
+            objective: Objective = DEFAULT_OBJECTIVE,
+            constraints: Sequence[Constraint] = ()) -> Candidate:
+    """Frontier selection, delegated to the request's ``Objective``.
+
+    The default objective reproduces the historical hard-coded rule bit
+    for bit: latency first; among candidates within 25% of the best
+    latency, the lowest DRAM traffic (the paper optimizes both
+    performance and energy — Fig. 13 / Fig. 14).
+    """
+    return objective.select(list(cands), [_cand_metrics(c) for c in cands],
+                            constraints)
 
 
 def _pareto(points: List[Candidate]) -> List[Candidate]:
@@ -711,7 +730,10 @@ def _dp_frontier(seg: Segment, plan_ij, max_span: int,
 
 
 def _sim_rerank(viable: Sequence[Candidate], hw: HWConfig,
-                topology: Topology) -> Candidate:
+                topology: Topology,
+                objective: Objective = DEFAULT_OBJECTIVE,
+                constraints: Sequence[Constraint] = (),
+                max_bursts: Optional[int] = None) -> Candidate:
     """Re-rank the guarded Pareto frontier by *simulated* latency.
 
     Every candidate here already dominates (or is) the uniform choice on
@@ -720,57 +742,86 @@ def _sim_rerank(viable: Sequence[Candidate], hw: HWConfig,
     closed-form interval model.  Analytical (latency, dram) stay as the
     deterministic tie-breakers so ``sim_check`` is a refinement, never a
     regression, of the default selection order.
+
+    Under a non-default objective (or constraints) the selection is the
+    objective itself applied to the candidates' metrics with
+    ``latency_cycles`` replaced by the simulated latency; the default
+    latency-first path keeps the historical pure-lexicographic
+    ``min(sim, lat, dram)`` exactly.
     """
     from .simulator import simulate_segment   # deferred: simulator imports us
+    from .plan_api import DEFAULT_MAX_BURSTS
+
+    bursts = DEFAULT_MAX_BURSTS if max_bursts is None else max_bursts
 
     def sim_latency(cand: Candidate) -> float:
-        return sum(simulate_segment(p, hw, topology).latency_cycles
+        return sum(simulate_segment(p, hw, topology, bursts).latency_cycles
                    for p in cand[2])
 
-    return min(viable, key=lambda c: (sim_latency(c), c[0], c[1]))
+    if objective == DEFAULT_OBJECTIVE and not constraints:
+        return min(viable, key=lambda c: (sim_latency(c), c[0], c[1]))
+    metrics = []
+    for c in viable:
+        m = _cand_metrics(c)
+        m["latency_cycles"] = sim_latency(c)
+        metrics.append(m)
+    return objective.select(list(viable), metrics, constraints)
 
 
 def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
                           topology: Topology, df_fn,
                           engine: str = "batch",
                           sim_check: bool = False,
-                          branch: bool = False) -> List[SegmentPlan]:
+                          branch: bool = False,
+                          objective: Objective = DEFAULT_OBJECTIVE,
+                          constraints: Sequence[Constraint] = (),
+                          max_bursts: Optional[int] = None
+                          ) -> List[SegmentPlan]:
     plan_ij = _segment_planner(g, hw, topology, df_fn, engine=engine)
-    u_lat, u_dram, u_plans = _select(_uniform_candidates(seg, plan_ij))
+    u_lat, u_dram, u_plans = _select(_uniform_candidates(seg, plan_ij),
+                                     objective, constraints)
     if seg.depth == 1:
         return list(u_plans)
     max_span = min(seg.depth, hw.max_depth, DP_MAX_SPAN)
     frontier = _dp_frontier(seg, plan_ij, max_span)
-    # guard: the DP result must dominate (or match) the uniform enumeration
-    # on BOTH axes — strictly no-worse plans by construction
+    # guard, re-expressed per objective: the DP result must dominate (or
+    # match) the uniform enumeration's best *under the same objective and
+    # constraints* on BOTH objective axes — strictly no-worse plans by
+    # construction, whatever the selection rule
     viable = [(l, d, p) for l, d, p in frontier
               if l <= u_lat and d <= u_dram]
     viable.append((u_lat, u_dram, u_plans))
     regions = _region_plans(g, seg, hw, topology, df_fn) if branch else {}
     if not regions:
         if sim_check:
-            _, _, chosen = _sim_rerank(viable, hw, topology)
+            _, _, chosen = _sim_rerank(viable, hw, topology, objective,
+                                       constraints, max_bursts)
         else:
-            _, _, chosen = _select(viable)
+            _, _, chosen = _select(viable, objective, constraints)
         return list(chosen)
-    # second guard: the branch-extended DP must dominate (or match) the
-    # *linearized* selection on BOTH axes, so co-placement is strictly
-    # never-worse than serializing the topological order
-    lin_lat, lin_dram, lin_plans = _select(viable)
+    # second guard, same per-objective rule: the branch-extended DP must
+    # dominate (or match) the *linearized* selection on BOTH axes, so
+    # co-placement is strictly never-worse than serializing the
+    # topological order under any objective
+    lin_lat, lin_dram, lin_plans = _select(viable, objective, constraints)
     b_frontier = _dp_frontier(seg, plan_ij, max_span, regions)
     b_viable = [(l, d, p) for l, d, p in b_frontier
                 if l <= lin_lat and d <= lin_dram]
     b_viable.append((lin_lat, lin_dram, lin_plans))
     if sim_check:
-        _, _, chosen = _sim_rerank(b_viable, hw, topology)
+        _, _, chosen = _sim_rerank(b_viable, hw, topology, objective,
+                                   constraints, max_bursts)
     else:
-        _, _, chosen = _select(b_viable)
+        _, _, chosen = _select(b_viable, objective, constraints)
     return list(chosen)
 
 
 def plan_pipeorgan(g: Graph, hw: HWConfig,
                    topology: Topology = Topology.AMP,
-                   sim_check: bool = False) -> PlanResult:
+                   sim_check: bool = False,
+                   objective: Objective = DEFAULT_OBJECTIVE,
+                   constraints: Sequence[Constraint] = (),
+                   max_bursts: Optional[int] = None) -> PlanResult:
     """Full PipeOrgan flow (Fig. 7) with the cut-point DP mapper.
 
     Stage 1's footprint heuristic gives the *maximum useful* depth per
@@ -791,45 +842,67 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
     (``graph.branch_regions``) as a single branch-parallel segment, and a
     second guard keeps the result never-worse than the purely linearized
     selection (``plan_pipeorgan_linear``) on both objective axes.
+
+    ``objective``/``constraints`` steer the frontier selection (and the
+    ``sim_check`` re-rank); both guards are applied against the baseline
+    selected *under the same objective*, so any objective's plan is
+    never-worse than the uniform enumeration and the linearized planner
+    would be for that objective.  The default reproduces the historical
+    latency-first rule bit for bit.
     """
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plans.extend(_best_subsegmentation(g, s, hw, topology,
                                            _pipeorgan_df_fn,
                                            sim_check=sim_check,
-                                           branch=True))
+                                           branch=True,
+                                           objective=objective,
+                                           constraints=constraints,
+                                           max_bursts=max_bursts))
     return PlanResult(g.name, "pipeorgan", topology, plans)
 
 
 def plan_pipeorgan_linear(g: Graph, hw: HWConfig,
                           topology: Topology = Topology.AMP,
-                          sim_check: bool = False) -> PlanResult:
+                          sim_check: bool = False,
+                          objective: Objective = DEFAULT_OBJECTIVE,
+                          constraints: Sequence[Constraint] = (),
+                          max_bursts: Optional[int] = None) -> PlanResult:
     """The cut-point DP *without* branch-parallel candidates.
 
     This is exactly the pre-branch-aware planner: every series-parallel
     region is serialized in topological order.  Kept as the guard baseline
-    (``plan_pipeorgan`` must never lose to it on either objective axis)
-    and for the co-placed-vs-serialized differential sweeps.
+    (``plan_pipeorgan`` must never lose to it on either objective axis,
+    per objective) and for the co-placed-vs-serialized differential
+    sweeps.
     """
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plans.extend(_best_subsegmentation(g, s, hw, topology,
                                            _pipeorgan_df_fn,
-                                           sim_check=sim_check))
+                                           sim_check=sim_check,
+                                           objective=objective,
+                                           constraints=constraints,
+                                           max_bursts=max_bursts))
     return PlanResult(g.name, "pipeorgan-linear", topology, plans)
 
 
 def plan_pipeorgan_uniform(g: Graph, hw: HWConfig,
-                           topology: Topology = Topology.AMP) -> PlanResult:
+                           topology: Topology = Topology.AMP,
+                           objective: Objective = DEFAULT_OBJECTIVE,
+                           constraints: Sequence[Constraint] = ()
+                           ) -> PlanResult:
     """The original uniform-depth enumeration on the vectorized engine.
 
     Same search space and selection rule as the seed planner; used by the
-    equivalence tests as the baseline the DP must never lose to.
+    equivalence tests as the baseline the DP must never lose to (selected
+    under the same objective as the DP when one is given).
     """
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plan_ij = _segment_planner(g, hw, topology, _pipeorgan_df_fn)
-        _, _, chosen = _select(_uniform_candidates(s, plan_ij))
+        _, _, chosen = _select(_uniform_candidates(s, plan_ij),
+                               objective, constraints)
         plans.extend(chosen)
     return PlanResult(g.name, "pipeorgan-uniform", topology, plans)
 
@@ -957,10 +1030,47 @@ def plan_layer_by_layer(g: Graph, hw: HWConfig) -> PlanResult:
     return PlanResult(g.name, "layer-by-layer", Topology.MESH, plans)
 
 
-STRATEGIES = {
-    "pipeorgan": plan_pipeorgan,
-    "pipeorgan-linear": plan_pipeorgan_linear,
-    "tangram": plan_tangram_like,
-    "simba": plan_simba_like,
-    "layerbylayer": plan_layer_by_layer,
-}
+# ---------------------------------------------------------------------------
+# registration: the built-in strategies and this module's caches
+# ---------------------------------------------------------------------------
+
+register_strategy("pipeorgan", plan_pipeorgan, Topology.AMP,
+                  supports_sim_check=True, supports_objective=True)
+register_strategy("pipeorgan-linear", plan_pipeorgan_linear, Topology.AMP,
+                  supports_sim_check=True, supports_objective=True)
+register_strategy("pipeorgan-uniform", plan_pipeorgan_uniform, Topology.AMP,
+                  supports_objective=True)
+register_strategy("tangram", plan_tangram_like, Topology.MESH)
+register_strategy("simba", plan_simba_like, Topology.MESH)
+register_strategy("layerbylayer", plan_layer_by_layer, Topology.MESH,
+                  takes_topology=False)
+
+# the DP's memoization layers, published through the public cache registry
+# (consumed by Planner.cache_info_all; plugins register alongside)
+register_cache("place", lambda: tuple(_cached_place.cache_info()))
+register_cache("pair_traffic", lambda: tuple(_pair_traffic.cache_info()))
+
+
+class _StrategiesView(collections.abc.Mapping):
+    """Read-only ``name -> plan function`` view over the strategy
+    registry, kept for backward compatibility with the old module-level
+    ``STRATEGIES`` dict; new code should use ``plan_api.get_strategy`` /
+    ``register_strategy``."""
+
+    def __getitem__(self, name: str):
+        from .plan_api import get_strategy
+        try:
+            return get_strategy(name).fn
+        except ValueError:
+            raise KeyError(name) from None   # Mapping contract: 'in'/.get()
+
+    def __iter__(self):
+        from .plan_api import strategy_names
+        return iter(strategy_names())
+
+    def __len__(self) -> int:
+        from .plan_api import strategy_names
+        return len(strategy_names())
+
+
+STRATEGIES = _StrategiesView()

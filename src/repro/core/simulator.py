@@ -74,6 +74,8 @@ import numpy as np
 
 from .hwconfig import HWConfig, PAPER_HW
 from .noc import FlowBatch, LRUCache, Topology, placement_key, route
+from .plan_api import DEFAULT_MAX_BURSTS as _DEFAULT_MAX_BURSTS
+from .plan_api import PlanRequest, register_cache as _register_cache
 from .pipeline_model import (gb_port_words_per_cycle, op_compute_cycles,
                              op_work, weight_dram_traffic)
 from .planner import PlanResult, SegmentPlan
@@ -104,7 +106,9 @@ LATENCY_BAND_UNCONGESTED = (0.50, 2.05)
 #: steady state at the measured tail rate.  The max-plus engine made the
 #: per-burst cost sublinear (one impulse replay per *transient* burst, not
 #: per burst), so the default prefix is 8x the scalar engine's old 64.
-DEFAULT_MAX_BURSTS = 512
+#: Defined in ``plan_api`` (the request layer defaults ``max_bursts``
+#: from it) and re-exported here for backward compatibility.
+DEFAULT_MAX_BURSTS = _DEFAULT_MAX_BURSTS
 
 
 # ---------------------------------------------------------------------------
@@ -411,6 +415,9 @@ def sim_cache_info() -> Tuple[int, int, int, int]:
 
 def sim_cache_clear() -> None:
     _PROGRAM_CACHE.clear()
+
+
+_register_cache("sim_programs", sim_cache_info)
 
 
 # ---------------------------------------------------------------------------
@@ -835,11 +842,18 @@ class SegmentValidation:
 
 @dataclasses.dataclass
 class ValidationReport:
-    """Plan-level differential report with the declared band contract."""
+    """Plan-level differential report with the declared band contract.
+
+    ``request_token`` keys the report to the ``PlanRequest`` it validated
+    (when one was given): the same content hash the ``PlanStore`` files
+    artifacts under, so a validation is attributable to an exact request
+    identity across processes.
+    """
     strategy: str
     topology: Topology
     band: Tuple[float, float]
     segments: List[SegmentValidation]
+    request_token: Optional[str] = None
 
     @property
     def latency_within_band(self) -> bool:
@@ -877,14 +891,23 @@ class ValidationReport:
 
 def validate_plan(plan: PlanResult, hw: HWConfig = PAPER_HW,
                   max_bursts: int = DEFAULT_MAX_BURSTS,
-                  band: Optional[Tuple[float, float]] = None
+                  band: Optional[Tuple[float, float]] = None,
+                  request: Optional[PlanRequest] = None
                   ) -> ValidationReport:
     """Differential-test a plan: simulate it and compare segment by segment.
 
     ``band`` defaults to ``LATENCY_BAND`` — the repo-wide contract the
-    differential sweep enforces.
+    differential sweep enforces.  When a ``request`` is given it supplies
+    the hardware and burst budget, and the report is keyed to the
+    request's cache token (the ``Planner`` caches validations under it).
     """
     band = band or LATENCY_BAND
+    token = None
+    if request is not None:
+        hw = request.hw
+        if request.max_bursts is not None:
+            max_bursts = request.max_bursts
+        token = request.cache_token()
     rows: List[SegmentValidation] = []
     for seg in plan.segments:
         sim = simulate_segment(seg, hw, plan.topology, max_bursts)
@@ -897,4 +920,5 @@ def validate_plan(plan: PlanResult, hw: HWConfig = PAPER_HW,
             analytical_peak_load=(seg.noc.worst_channel_load
                                   if seg.noc is not None else 0.0),
             simulated_peak_load=sim.peak_link_load))
-    return ValidationReport(plan.strategy, plan.topology, band, rows)
+    return ValidationReport(plan.strategy, plan.topology, band, rows,
+                            request_token=token)

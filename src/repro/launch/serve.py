@@ -1,7 +1,14 @@
 """Serving launcher: continuous-batching engine over a slot pool.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        --requests 6 --max-new 12 [--kv-quant]
+        --requests 6 --max-new 12 [--kv-quant] \
+        [--plan] [--plan-store DIR]
+
+``--plan`` attaches the PipeOrgan accelerator plan for the model's decode
+step (a ``PlanRequest`` through the shared planner facade); with
+``--plan-store`` the plan is admitted from / saved to a directory of
+serialized ``PlanArtifact``s, so a warm store serves with zero planner
+invocations at startup — the offline-plan -> online-serve path.
 
 Production deployments replace --smoke with the sharded production mesh
 (the same serve_step the dry-run compiles for decode_32k / long_500k).
@@ -15,8 +22,9 @@ import time
 import jax
 
 from repro.configs import ARCHS, get_config
+from repro.core import PAPER_HW, PlanRequest, PlanStore, Topology
 from repro.models import init_model
-from repro.runtime.serve_loop import Request, ServeEngine
+from repro.runtime.serve_loop import Request, ServeEngine, decode_graph
 
 
 def main() -> None:
@@ -28,14 +36,26 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--plan", action="store_true",
+                    help="attach the accelerator plan for the decode step")
+    ap.add_argument("--plan-store", default=None, metavar="DIR",
+                    help="admit/persist the plan as an artifact in DIR "
+                         "(implies --plan)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.kv_quant:
         cfg = dataclasses.replace(cfg, kv_quant=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
+    plan_request = plan_store = None
+    if args.plan or args.plan_store:
+        plan_request = PlanRequest(decode_graph(cfg), hw=PAPER_HW,
+                                   topology=Topology.AMP)
+        if args.plan_store:
+            plan_store = PlanStore(args.plan_store)
     engine = ServeEngine(params, cfg, batch_slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len, plan_request=plan_request,
+                         plan_store=plan_store)
     for i in range(args.requests):
         engine.submit(Request(rid=i, prompt=[2 + i, 7, 3 * i + 1],
                               max_new_tokens=args.max_new))
@@ -46,6 +66,10 @@ def main() -> None:
     print(f"served {len(done)} requests / {total} tokens in {dt*1e3:.0f} ms "
           f"({total/dt:.0f} tok/s, {args.slots} slots, "
           f"kv_quant={cfg.kv_quant})")
+    if engine.plan is not None:
+        print(f"decode plan: source={engine.plan_source} "
+              f"{engine.plan.latency_cycles:.3e} cycles/token, "
+              f"{engine.plan.dram_bytes:.3e} DRAM B/token")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"  rid={r.rid} out={r.output}")
 

@@ -13,6 +13,7 @@ host-driven; the device program is the single fused serve/prefill step.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -20,7 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Graph, HWConfig, Topology, gemm, get_planner
+from repro.core import (Graph, HWConfig, PlanAPIDeprecationWarning,
+                        PlanRequest, PlanSchemaError, PlanStore, Topology,
+                        gemm, get_planner)
 from repro.models.common import ModelConfig
 from repro.models.transformer import decode_step, init_cache
 
@@ -67,7 +70,9 @@ class ServeEngine:
     """Continuous-batching engine over a fixed slot pool."""
 
     def __init__(self, params, cfg: ModelConfig, batch_slots: int,
-                 max_len: int, plan_hw: Optional[HWConfig] = None,
+                 max_len: int, plan_request: Optional[PlanRequest] = None,
+                 plan_store: Optional[PlanStore] = None,
+                 plan_hw: Optional[HWConfig] = None,
                  plan_topology: Topology = Topology.AMP):
         self.params = params
         self.cfg = cfg
@@ -82,13 +87,41 @@ class ServeEngine:
         self.generated = np.zeros(batch_slots, np.int32)
         self._step = jax.jit(self._device_step)
         self.ticks = 0
-        # optional accelerator plan for this model's decode step: planned
-        # through the shared facade, so identical engines (same config and
-        # target) hit the LRU plan cache instead of re-planning
-        self.plan = None
+        # optional accelerator plan for this model's decode step.  The
+        # resolution order is the offline-plan -> online-serve path:
+        #   1. a ``plan_store`` artifact matching ``plan_request`` exactly
+        #      (zero planner invocations on a warm store);
+        #   2. the shared ``Planner`` facade (identical engines hit the
+        #      LRU plan cache instead of re-planning), after which the
+        #      plan is saved back to the store for the next process.
+        # ``plan_hw``/``plan_topology`` are the deprecated pre-request
+        # knobs, kept as a shim.
         if plan_hw is not None:
-            self.plan = get_planner().plan(decode_graph(cfg), hw=plan_hw,
-                                           topology=plan_topology)
+            if plan_request is not None:
+                raise TypeError("pass plan_request or the deprecated "
+                                "plan_hw/plan_topology, not both")
+            warnings.warn(
+                "ServeEngine(plan_hw=..., plan_topology=...) is "
+                "deprecated; pass plan_request=PlanRequest(decode_graph("
+                "cfg), hw=..., topology=...) (see docs/api.md)",
+                PlanAPIDeprecationWarning, stacklevel=2)
+            plan_request = PlanRequest(decode_graph(cfg), hw=plan_hw,
+                                       topology=plan_topology)
+        self.plan = None
+        self.plan_source: Optional[str] = None
+        self.plan_request = plan_request
+        if plan_request is not None:
+            if plan_store is not None:
+                try:
+                    self.plan = plan_store.load(plan_request)
+                except PlanSchemaError:
+                    self.plan = None   # stale-schema artifact: re-plan
+                self.plan_source = "store" if self.plan is not None else None
+            if self.plan is None:
+                self.plan = get_planner().plan(plan_request)
+                self.plan_source = "planner"
+                if plan_store is not None:
+                    plan_store.save(plan_request, self.plan)
 
     # -- device program ------------------------------------------------------
     def _device_step(self, params, cache, tokens, index):

@@ -1,0 +1,95 @@
+"""The legacy positional planning API: still works, warns, same results.
+
+This is the ONLY module allowed to exercise the deprecated call forms —
+CI's blocking ``api-deprecation`` step runs the whole tier-1 suite with
+``-W error::repro.core.plan_api.PlanAPIDeprecationWarning``, so a legacy
+call anywhere else (src/, examples/, other tests) fails the build.  The
+``pytest.warns`` blocks here capture the warnings locally, which keeps
+this module green under that filter.
+"""
+import pytest
+
+from repro.core import (PAPER_HW, PlanAPIDeprecationWarning, PlanRequest,
+                        Planner, Topology)
+from repro.core.graph import chain, conv
+
+HW = PAPER_HW
+
+
+def _tiny_graph(name="legacy"):
+    return chain(name, [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
+                        for i in range(4)])
+
+
+def test_legacy_plan_warns_and_matches_request_api():
+    planner = Planner(maxsize=8)
+    g = _tiny_graph()
+    with pytest.warns(PlanAPIDeprecationWarning):
+        legacy = planner.plan(g, HW, Topology.AMP)
+    # the shim builds the equivalent request -> same cache entry
+    assert planner.plan(PlanRequest(g, hw=HW,
+                                    topology=Topology.AMP)) is legacy
+    assert planner.cache_info().hits == 1
+
+
+def test_legacy_plan_defaults_match():
+    planner = Planner(maxsize=8)
+    g = _tiny_graph()
+    with pytest.warns(PlanAPIDeprecationWarning):
+        legacy = planner.plan(g)              # all-defaults legacy call
+    assert planner.plan(PlanRequest(g)) is legacy
+
+
+def test_legacy_plan_rejects_unknown_strategy():
+    with pytest.warns(PlanAPIDeprecationWarning):
+        with pytest.raises(ValueError):
+            Planner().plan(_tiny_graph(), HW, strategy="nope")
+
+
+def test_request_plus_legacy_arguments_is_an_error():
+    planner = Planner(maxsize=8)
+    req = PlanRequest(_tiny_graph())
+    with pytest.raises(TypeError):
+        planner.plan(req, strategy="tangram")
+    with pytest.raises(TypeError):
+        planner.plan_all({"g": _tiny_graph()}, req, sim_check=True)
+
+
+def test_legacy_plan_all_warns_and_forwards_sim_check():
+    planner = Planner(maxsize=8)
+    graphs = {"a": _tiny_graph("a")}
+    with pytest.warns(PlanAPIDeprecationWarning):
+        plans = planner.plan_all(graphs, hw=HW, topology=Topology.MESH,
+                                 sim_check=True)
+    # the historical bug: sim_check was silently dropped; now it keys the
+    # cache (and steers planning) exactly like the template path
+    assert planner.plan(PlanRequest(graphs["a"], hw=HW,
+                                    topology=Topology.MESH,
+                                    sim_check=True)) is plans["a"]
+
+
+def test_legacy_validate_graph_path_warns():
+    planner = Planner(maxsize=8)
+    g = _tiny_graph()
+    with pytest.warns(PlanAPIDeprecationWarning):
+        report = planner.validate(g, HW, Topology.MESH, max_bursts=16)
+    assert report.ok is not None                 # a real report came back
+    req = PlanRequest(g, hw=HW, topology=Topology.MESH, max_bursts=16)
+    assert planner.validate(req) is report       # same cache entry
+
+
+def test_legacy_serve_engine_plan_hw_warns():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.runtime.serve_loop import ServeEngine
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.warns(PlanAPIDeprecationWarning):
+        eng = ServeEngine(params, cfg, batch_slots=1, max_len=32,
+                          plan_hw=HW)
+    assert eng.plan is not None and eng.plan_source == "planner"
+    with pytest.raises(TypeError):
+        ServeEngine(params, cfg, batch_slots=1, max_len=32, plan_hw=HW,
+                    plan_request=eng.plan_request)

@@ -1,0 +1,349 @@
+"""Declarative planning API: PlanRequest identity, Objective/Constraint
+frontier selection, the strategy registry, the cache registry hook, and
+``plan_all`` template forwarding.
+
+The acceptance spine: the default objective is bit-identical to the old
+hard-coded latency-first rule (pinned here on synthetic candidates and by
+the golden suite end to end), a non-default objective demonstrably
+changes chosen plans on branchful XR-bench tasks, and the double guard
+(never-worse than the uniform enumeration AND the linearized planner)
+holds *per objective*.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.xrbench import all_tasks
+from repro.core import (DEFAULT_OBJECTIVE, PAPER_HW, Constraint, Objective,
+                        PlanRequest, Planner, Term, Topology,
+                        get_strategy, latency_first, min_dram, min_energy,
+                        plan_layer_by_layer, plan_pipeorgan,
+                        plan_pipeorgan_linear, plan_pipeorgan_uniform,
+                        register_cache, register_strategy, strategy_names,
+                        unregister_cache, unregister_strategy)
+from repro.core.graph import chain, conv
+
+HW = PAPER_HW
+
+#: XR-bench graphs with real branch structure (multi-input joins) — the
+#: workloads where frontier selection has room to move.
+BRANCHFUL = ("eye_segmentation", "hand_tracking", "keyword_spotting",
+             "depth_estimation", "object_detection", "plane_detection")
+
+
+def _tiny_graph(name="tiny"):
+    return chain(name, [conv(f"c{i}", 1, 32, 32, 8, 8, r=3)
+                        for i in range(4)])
+
+
+def _legacy_select(cands):
+    """The pre-API hard-coded rule, verbatim."""
+    best_lat = min(c[0] for c in cands)
+    viable = [c for c in cands if c[0] <= 1.25 * best_lat]
+    return min(viable, key=lambda c: (c[1], c[0]))
+
+
+def _metrics(cands):
+    return [{"latency_cycles": l, "dram_bytes": d, "energy": e}
+            for l, d, e in cands]
+
+
+# ---------------------------------------------------------------------------
+# objectives
+# ---------------------------------------------------------------------------
+
+
+def test_default_objective_matches_legacy_rule_bitwise():
+    cands = [
+        (100.0, 50.0, 7.0), (110.0, 40.0, 6.0), (124.9, 40.0, 5.0),
+        (126.0, 1.0, 4.0), (200.0, 0.5, 3.0), (100.0, 50.0, 2.0),
+    ]
+    got = DEFAULT_OBJECTIVE.select(cands, _metrics(cands))
+    assert got == _legacy_select(cands)
+    # ties resolve to the earliest candidate, exactly like min()
+    tied = [(100.0, 10.0, 1.0), (100.0, 10.0, 2.0)]
+    assert DEFAULT_OBJECTIVE.select(tied, _metrics(tied)) is tied[0]
+    # the slack band is multiplicative on the best latency
+    edge = [(100.0, 9.0, 0.0), (125.0, 1.0, 0.0), (125.1, 0.5, 0.0)]
+    assert DEFAULT_OBJECTIVE.select(edge, _metrics(edge)) == edge[1]
+
+
+def test_min_dram_and_min_energy_objectives():
+    cands = [(10.0, 100.0, 9.0), (50.0, 20.0, 1.0), (60.0, 20.0, 5.0)]
+    assert min_dram().select(cands, _metrics(cands)) == cands[1]
+    assert min_energy().select(cands, _metrics(cands)) == cands[1]
+    assert DEFAULT_OBJECTIVE.select(cands, _metrics(cands)) == cands[0]
+
+
+def test_weighted_objective():
+    cands = [(10.0, 1000.0, 0.0), (20.0, 10.0, 0.0)]
+    lat_heavy = Objective.weighted(latency_cycles=1.0, dram_bytes=1e-6)
+    dram_heavy = Objective.weighted(latency_cycles=1e-6, dram_bytes=1.0)
+    assert lat_heavy.select(cands, _metrics(cands)) == cands[0]
+    assert dram_heavy.select(cands, _metrics(cands)) == cands[1]
+
+
+def test_constraints_bound_the_selection():
+    cands = [(100.0, 50.0, 0.0), (105.0, 30.0, 0.0), (200.0, 1.0, 0.0)]
+    m = _metrics(cands)
+    # min DRAM s.t. latency <= 1.1x best: the 200-cycle point is excluded
+    got = min_dram().select(cands, m,
+                            (Constraint("latency_cycles",
+                                        max_ratio_to_best=1.1),))
+    assert got == cands[1]
+    # absolute bound
+    got = min_dram().select(cands, m,
+                            (Constraint("latency_cycles", max_value=101.0),))
+    assert got == cands[0]
+    # infeasible: best-effort falls back to the closest candidate
+    got = min_dram().select(cands, m,
+                            (Constraint("latency_cycles", max_value=1.0),))
+    assert got == cands[0]
+
+
+def test_objective_and_constraint_validation():
+    with pytest.raises(ValueError):
+        Term("cycles_of_glory")
+    with pytest.raises(ValueError):
+        Term("latency_cycles", rel_slack=-0.1)
+    with pytest.raises(ValueError):
+        Objective(kind="lex", terms=())
+    with pytest.raises(ValueError):
+        Objective(kind="vibes", terms=(Term("latency_cycles"),))
+    with pytest.raises(ValueError):
+        Constraint("latency_cycles")
+    with pytest.raises(ValueError):
+        Constraint("nope", max_value=1.0)
+
+
+def test_objectives_are_hashable_and_comparable():
+    assert latency_first() == DEFAULT_OBJECTIVE
+    assert hash(latency_first()) == hash(DEFAULT_OBJECTIVE)
+    assert min_dram() != DEFAULT_OBJECTIVE
+    assert len({latency_first(), latency_first(0.25), min_dram()}) == 2
+
+
+# ---------------------------------------------------------------------------
+# PlanRequest identity
+# ---------------------------------------------------------------------------
+
+
+def test_request_identity_is_structural():
+    a = PlanRequest(_tiny_graph(), hw=HW, topology=Topology.AMP)
+    b = PlanRequest(_tiny_graph(), hw=HW, topology=Topology.AMP)
+    assert a == b and hash(a) == hash(b)          # same content, new objects
+    assert a.cache_token() == b.cache_token()
+    c = PlanRequest(_tiny_graph(), hw=HW, topology=Topology.MESH)
+    d = PlanRequest(_tiny_graph(), hw=HW, objective=min_dram())
+    e = PlanRequest(_tiny_graph(), hw=HW, sim_check=True)
+    tokens = {r.cache_token() for r in (a, c, d, e)}
+    assert len(tokens) == 4                        # every knob is identity
+    assert len({a, b, c, d, e}) == 4
+
+
+def test_request_resolves_default_topology_per_strategy():
+    assert PlanRequest(_tiny_graph()).topology == Topology.AMP
+    assert PlanRequest(_tiny_graph(),
+                       strategy="tangram").topology == Topology.MESH
+    assert PlanRequest(_tiny_graph(), strategy="tangram",
+                       topology=Topology.TORUS).topology == Topology.TORUS
+
+
+def test_request_validates_strategy_capabilities():
+    with pytest.raises(ValueError):
+        PlanRequest(_tiny_graph(), strategy="nope")
+    with pytest.raises(ValueError):
+        PlanRequest(_tiny_graph(), strategy="tangram", sim_check=True)
+    with pytest.raises(ValueError):
+        PlanRequest(_tiny_graph(), strategy="simba", objective=min_dram())
+    with pytest.raises(ValueError):
+        PlanRequest(_tiny_graph(), strategy="layerbylayer",
+                    constraints=(Constraint("latency_cycles",
+                                            max_ratio_to_best=1.1),))
+    # the frontier strategies accept all of it
+    PlanRequest(_tiny_graph(), strategy="pipeorgan-linear", sim_check=True,
+                objective=min_dram())
+
+
+def test_request_template_replace():
+    template = PlanRequest(_tiny_graph("a"), hw=HW, objective=min_dram(),
+                           sim_check=True, max_bursts=64)
+    other = dataclasses.replace(template, graph=_tiny_graph("b"))
+    assert other.objective == min_dram()
+    assert other.sim_check and other.max_bursts == 64
+    assert other != template                      # fingerprint moved
+    assert other.fingerprint[0] == "b"
+
+
+# ---------------------------------------------------------------------------
+# strategy + cache registries
+# ---------------------------------------------------------------------------
+
+
+def test_registry_rejects_duplicates_and_unknowns():
+    assert "pipeorgan" in strategy_names()
+    with pytest.raises(ValueError):
+        register_strategy("pipeorgan", plan_pipeorgan, Topology.AMP)
+    with pytest.raises(ValueError):
+        get_strategy("never-registered")
+
+
+def test_legacy_strategies_view_keeps_mapping_contract():
+    from repro.core import STRATEGIES
+
+    assert STRATEGIES["pipeorgan"] is plan_pipeorgan
+    assert "pipeorgan" in STRATEGIES
+    assert "nope" not in STRATEGIES           # KeyError, not ValueError
+    assert STRATEGIES.get("nope") is None
+    assert set(strategy_names()) == set(STRATEGIES)
+
+
+def test_max_bursts_outside_sim_check_does_not_fork_plan_identity():
+    """max_bursts only changes the plan under sim_check (it is the
+    re-rank budget); a validate-with-custom-budget request must hit the
+    same plan cache entry as the served plan."""
+    g = _tiny_graph()
+    assert PlanRequest(g) == PlanRequest(g, max_bursts=16)
+    assert PlanRequest(g).cache_token() == \
+        PlanRequest(g, max_bursts=16).cache_token()
+    a = PlanRequest(g, sim_check=True, max_bursts=16)
+    b = PlanRequest(g, sim_check=True, max_bursts=32)
+    assert a != b and a.cache_token() != b.cache_token()
+    planner = Planner(maxsize=4)
+    plan = planner.plan(PlanRequest(g))
+    assert planner.plan(PlanRequest(g, max_bursts=16)) is plan
+    assert planner.cache_info().misses == 1
+
+
+def test_third_party_strategy_plugs_into_facade():
+    calls = []
+
+    def plan_fake(g, hw, topology, sim_check=False, max_bursts=None,
+                  objective=DEFAULT_OBJECTIVE, constraints=()):
+        calls.append({"sim_check": sim_check, "objective": objective})
+        return plan_layer_by_layer(g, hw)
+
+    register_strategy("fake-strategy", plan_fake, Topology.MESH,
+                      supports_sim_check=True, supports_objective=True)
+    try:
+        planner = Planner(maxsize=4)
+        req = PlanRequest(_tiny_graph(), hw=HW, strategy="fake-strategy",
+                          sim_check=True, objective=min_dram())
+        plan = planner.plan(req)
+        assert plan.latency_cycles > 0
+        assert calls == [{"sim_check": True, "objective": min_dram()}]
+        assert planner.plan(req) is plan          # cached under the request
+        assert len(calls) == 1
+    finally:
+        unregister_strategy("fake-strategy")
+    with pytest.raises(ValueError):
+        PlanRequest(_tiny_graph(), strategy="fake-strategy")
+
+
+def test_plugin_cache_appears_in_cache_registry():
+    register_cache("fake-cache", lambda: (1, 2, 3, 4))
+    try:
+        planner = Planner(maxsize=4)
+        assert "fake-cache" in planner.cache_registry()
+        info = planner.cache_info_all()["fake-cache"]
+        assert tuple(info) == (1, 2, 3, 4)
+        assert planner.cache_info("fake-cache") == info
+        with pytest.raises(ValueError):
+            register_cache("fake-cache", lambda: (0, 0, 0, 0))
+    finally:
+        unregister_cache("fake-cache")
+    assert "fake-cache" not in Planner(maxsize=4).cache_registry()
+
+
+def test_builtin_caches_come_through_the_registry():
+    reg = Planner(maxsize=4).cache_registry()
+    assert {"plan", "place", "pair_traffic", "flow_batch",
+            "sim_programs"} <= set(reg)
+    for fn in reg.values():
+        hits, misses, maxsize, currsize = fn()
+        assert hits >= 0 and misses >= 0 and currsize >= 0
+
+
+# ---------------------------------------------------------------------------
+# plan_all: template semantics (the sim_check-dropping fix)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_all_template_forwards_every_knob():
+    seen = []
+
+    def plan_spy(g, hw, topology, sim_check=False, max_bursts=None,
+                 objective=DEFAULT_OBJECTIVE, constraints=()):
+        seen.append((g.name, sim_check, objective))
+        return plan_layer_by_layer(g, hw)
+
+    register_strategy("spy-strategy", plan_spy, Topology.MESH,
+                      supports_sim_check=True, supports_objective=True)
+    try:
+        planner = Planner(maxsize=8)
+        graphs = {"a": _tiny_graph("a"), "b": _tiny_graph("b")}
+        template = PlanRequest(_tiny_graph("template"), hw=HW,
+                               strategy="spy-strategy", sim_check=True,
+                               objective=min_dram())
+        plans = planner.plan_all(graphs, template)
+        assert sorted(plans) == ["a", "b"]
+        # sim_check (historically dropped) and the objective both arrive
+        assert sorted(seen) == [("a", True, min_dram()),
+                                ("b", True, min_dram())]
+        with pytest.raises(TypeError):
+            planner.plan_all(graphs, template, strategy="pipeorgan")
+    finally:
+        unregister_strategy("spy-strategy")
+
+
+# ---------------------------------------------------------------------------
+# non-default objectives on real workloads + the per-objective guard
+# ---------------------------------------------------------------------------
+
+
+def test_min_dram_changes_chosen_plan_on_branchful_task():
+    """The frontier the DP already computes must be reachable: min-DRAM
+    picks a different frontier point than latency-first on a branchful
+    XR-bench task, with strictly lower DRAM traffic."""
+    g = all_tasks()["keyword_spotting"]
+    default = plan_pipeorgan(g, HW, Topology.AMP)
+    frugal = plan_pipeorgan(g, HW, Topology.AMP, objective=min_dram())
+    assert frugal.dram_bytes < default.dram_bytes * (1 - 1e-9)
+    assert [s.segment.depth for s in frugal.segments] != \
+        [s.segment.depth for s in default.segments] or \
+        frugal.dram_bytes != default.dram_bytes
+
+
+@pytest.mark.parametrize("task", ["keyword_spotting", "hand_tracking"])
+def test_per_objective_double_guard(task):
+    """The double guard, re-expressed per objective: under min-DRAM the
+    branch-aware DP is never worse than (a) the uniform enumeration and
+    (b) the linearized planner, each selected under the same objective,
+    on BOTH objective axes."""
+    g = all_tasks()[task]
+    obj = min_dram()
+    dp = plan_pipeorgan(g, HW, Topology.AMP, objective=obj)
+    uni = plan_pipeorgan_uniform(g, HW, Topology.AMP, objective=obj)
+    lin = plan_pipeorgan_linear(g, HW, Topology.AMP, objective=obj)
+    for base in (uni, lin):
+        assert dp.latency_cycles <= base.latency_cycles * (1 + 1e-9)
+        assert dp.dram_bytes <= base.dram_bytes * (1 + 1e-9)
+    # all three cover every op exactly once
+    for plan in (dp, uni, lin):
+        assert sum(s.segment.depth for s in plan.segments) == len(g.ops)
+
+
+def test_latency_constraint_bounds_min_dram_plan():
+    """"min DRAM s.t. latency <= 1.1x best": the constrained plan may not
+    exceed 1.1x the latency-first plan's latency (per segment the bound is
+    relative to the frontier's best latency, which the latency-first
+    choice can only exceed)."""
+    g = all_tasks()["keyword_spotting"]
+    default = plan_pipeorgan(g, HW, Topology.AMP)
+    bounded = plan_pipeorgan(
+        g, HW, Topology.AMP, objective=min_dram(),
+        constraints=(Constraint("latency_cycles", max_ratio_to_best=1.1),))
+    unbounded = plan_pipeorgan(g, HW, Topology.AMP, objective=min_dram())
+    assert bounded.latency_cycles <= 1.1 * default.latency_cycles * (1 + 1e-9)
+    assert bounded.dram_bytes <= default.dram_bytes * (1 + 1e-9)
+    assert bounded.latency_cycles <= unbounded.latency_cycles * (1 + 1e-9)

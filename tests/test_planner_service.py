@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.configs.xrbench import all_tasks
-from repro.core import (PAPER_HW, CacheInfo, FlowBatch, Planner, Topology,
-                        analyze, analyze_reference, get_planner,
+from repro.core import (PAPER_HW, CacheInfo, FlowBatch, PlanRequest, Planner,
+                        Topology, analyze, analyze_reference, get_planner,
                         graph_fingerprint, multicast_flow_batch,
                         pair_flow_batch, plan_pipeorgan,
                         plan_pipeorgan_reference, plan_pipeorgan_uniform)
@@ -165,15 +165,15 @@ def _tiny_graph(name="tiny"):
 def test_planner_facade_caches_plans():
     planner = Planner(maxsize=8)
     g = _tiny_graph()
-    first = planner.plan(g, HW, Topology.AMP)
-    second = planner.plan(g, HW, Topology.AMP)
+    first = planner.plan(PlanRequest(g, hw=HW, topology=Topology.AMP))
+    second = planner.plan(PlanRequest(g, hw=HW, topology=Topology.AMP))
     assert second is first                      # cache hit returns same plan
     info = planner.cache_info()
     assert info == CacheInfo(hits=1, misses=1, maxsize=8, currsize=1)
     # a different topology / strategy is a different key
-    planner.plan(g, HW, Topology.MESH)
-    planner.plan(g, HW, strategy="tangram")
-    planner.plan(g, HW, strategy="layerbylayer")
+    planner.plan(PlanRequest(g, hw=HW, topology=Topology.MESH))
+    planner.plan(PlanRequest(g, hw=HW, strategy="tangram"))
+    planner.plan(PlanRequest(g, hw=HW, strategy="layerbylayer"))
     assert planner.cache_info().misses == 4
     planner.clear_cache()
     assert planner.cache_info() == CacheInfo(0, 0, 8, 0)
@@ -182,15 +182,17 @@ def test_planner_facade_caches_plans():
 def test_planner_facade_evicts_lru():
     planner = Planner(maxsize=2)
     for i in range(3):
-        planner.plan(_tiny_graph(f"g{i}"), HW, Topology.AMP)
+        planner.plan(PlanRequest(_tiny_graph(f"g{i}"), hw=HW,
+                                 topology=Topology.AMP))
     assert planner.cache_info().currsize == 2
-    planner.plan(_tiny_graph("g0"), HW, Topology.AMP)   # evicted -> miss
+    planner.plan(PlanRequest(_tiny_graph("g0"), hw=HW,
+                             topology=Topology.AMP))    # evicted -> miss
     assert planner.cache_info().misses == 4
 
 
 def test_planner_facade_rejects_unknown_strategy():
     with pytest.raises(ValueError):
-        Planner().plan(_tiny_graph(), HW, strategy="nope")
+        PlanRequest(_tiny_graph(), hw=HW, strategy="nope")
 
 
 def test_graph_fingerprint_tracks_structure():
@@ -219,9 +221,11 @@ def test_serve_engine_plans_through_facade():
     g = decode_graph(cfg)
     assert len(g.ops) == 4 * cfg.n_layers + 1
     params = init_model(jax.random.PRNGKey(0), cfg)
+    request = PlanRequest(g, hw=PAPER_HW, topology=Topology.AMP)
     eng = ServeEngine(params, cfg, batch_slots=1, max_len=32,
-                      plan_hw=PAPER_HW)
+                      plan_request=request)
     assert eng.plan is not None
+    assert eng.plan_source == "planner"
     eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
     done = eng.run()
     assert len(done) == 1
@@ -231,5 +235,6 @@ def test_serve_engine_plans_through_facade():
         stats["planned_cycles_per_token"] * stats["ticks"]
     # an identical engine re-plans via the shared facade cache
     hits_before = get_planner().cache_info().hits
-    ServeEngine(params, cfg, batch_slots=1, max_len=32, plan_hw=PAPER_HW)
+    ServeEngine(params, cfg, batch_slots=1, max_len=32,
+                plan_request=request)
     assert get_planner().cache_info().hits == hits_before + 1

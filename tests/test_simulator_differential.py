@@ -177,19 +177,27 @@ def test_validate_plan_end_to_end():
 
 
 def test_planner_facade_validate():
-    """`Planner.validate` accepts a graph (plans through the cache) or a
-    ready plan, and both paths validate the same object."""
+    """`Planner.validate` accepts a request (plans through the cache, and
+    the report is cached under the request) or a ready plan, and both
+    paths validate the same object."""
+    from repro.core import PlanRequest
+
     planner = Planner(maxsize=8)
     g = chain("facade", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
                          for i in range(4)])
-    rep_from_graph = planner.validate(g, SIM_HW, Topology.MESH,
-                                      max_bursts=16)
-    plan = planner.plan(g, SIM_HW, Topology.MESH)
+    request = PlanRequest(g, hw=SIM_HW, topology=Topology.MESH,
+                          max_bursts=16)
+    rep_from_request = planner.validate(request)
+    plan = planner.plan(request)
     rep_from_plan = planner.validate(plan, SIM_HW, max_bursts=16)
-    assert planner.cache_info().hits >= 1     # graph path reused the cache
-    assert [s.simulated_latency for s in rep_from_graph.segments] == \
+    assert planner.cache_info().hits >= 1   # request path reused the cache
+    assert [s.simulated_latency for s in rep_from_request.segments] == \
         [s.simulated_latency for s in rep_from_plan.segments]
-    assert rep_from_graph.ok and rep_from_plan.ok
+    assert rep_from_request.ok and rep_from_plan.ok
+    # the request-keyed report is cached and attributable
+    assert planner.validate(request) is rep_from_request
+    assert rep_from_request.request_token == request.cache_token()
+    assert rep_from_plan.request_token is None
 
 
 def test_simulate_plan_aggregates_segments():

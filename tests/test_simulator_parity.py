@@ -224,16 +224,21 @@ def test_sim_check_never_worsens_simulated_latency():
 
 
 def test_planner_facade_sim_check_key_and_guard():
+    from repro.core import PlanRequest
+
     planner = Planner(maxsize=8)
     g = chain("facade-sim", [conv(f"c{i}", 1, 24, 24, 8, 8, r=3)
                              for i in range(4)])
-    a = planner.plan(g, SIM_HW, Topology.MESH)
-    b = planner.plan(g, SIM_HW, Topology.MESH, sim_check=True)
+    plain = PlanRequest(g, hw=SIM_HW, topology=Topology.MESH)
+    checked = PlanRequest(g, hw=SIM_HW, topology=Topology.MESH,
+                          sim_check=True)
+    a = planner.plan(plain)
+    b = planner.plan(checked)
     assert planner.cache_info().misses == 2     # distinct cache keys
-    assert planner.plan(g, SIM_HW, Topology.MESH, sim_check=True) is b
-    assert planner.plan(g, SIM_HW, Topology.MESH) is a
+    assert planner.plan(checked) is b
+    assert planner.plan(plain) is a
     with pytest.raises(ValueError):
-        planner.plan(g, SIM_HW, strategy="tangram", sim_check=True)
+        PlanRequest(g, hw=SIM_HW, strategy="tangram", sim_check=True)
 
 
 def test_cache_info_exposes_every_layer():
