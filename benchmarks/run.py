@@ -53,6 +53,14 @@ def _derived(name: str, rows) -> str:
         if name == "planner_speed":
             tot = [r for r in rows if r.get("task") == "TOTAL"][0]
             return f"dp_speedup_vs_reference={tot['speedup']}"
+        if name == "planner_speed_jax":
+            gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
+            return ("geomean_jax_speedup_vs_numpy="
+                    f"{gm['speedup_vs_numpy']}")
+        if name == "sim_speed_jax":
+            tot = [r for r in rows if r.get("topology") == "ALL"][0]
+            return ("geomean_jax_speedup_vs_numpy="
+                    f"{tot['geomean_speedup_vs_numpy']}")
         if name == "sim_speed":
             tot = [r for r in rows if r.get("topology") == "ALL"][0]
             return (f"geomean_speedup_depth8={tot['geomean_speedup_depth8']};"
@@ -73,7 +81,9 @@ def _derived(name: str, rows) -> str:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run; their "
+                         "rows are merged into the existing summary.json")
     args = ap.parse_args()
 
     from benchmarks.kernel_bench import kernel_validation
@@ -82,11 +92,20 @@ def main() -> int:
     benches = dict(FIGURES)
     benches["kernel_validation"] = kernel_validation
 
+    only = None
+    if args.only:
+        only = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in only if n not in benches]
+        if unknown:
+            print(f"unknown benchmark(s): {', '.join(unknown)}; "
+                  f"available: {', '.join(benches)}", file=sys.stderr)
+            return 2
+
     summary = {}
     print("name,us_per_call,derived")
     failed = []
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         t0 = time.perf_counter()
         try:
@@ -101,8 +120,10 @@ def main() -> int:
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     out = RESULTS / "summary.json"
-    if args.only and out.exists():
-        # a --only run refreshes its own entry without dropping the rest
+    if only is not None and out.exists():
+        # a --only run refreshes (or adds) its own entries without
+        # dropping the rest — new top-level keys merge in, they are
+        # never silently discarded
         merged = json.loads(out.read_text())
         merged.update(summary)
         summary = merged

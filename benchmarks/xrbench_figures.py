@@ -419,6 +419,121 @@ def planner_speed() -> List[dict]:
     return rows
 
 
+def planner_speed_jax() -> List[dict]:
+    """Cold ``plan_pipeorgan`` wall-clock, numpy vs jax pricing engine,
+    per XR-Bench task (PR-6 tentpole).  Both engines pay the full DP with
+    every cross-call cache dropped; the jax column is measured after one
+    warm-up plan so jit tracing (a once-per-process cost, see
+    docs/engines.md) is not charged to the steady-state number —
+    ``jax_first_call_s`` reports the trace-included first plan
+    separately so the warm-up cost stays visible."""
+    import repro.core.planner as planner_mod
+    from repro.core import plan_pipeorgan
+    from repro.core.plan_api import jax_engine_available
+
+    if not jax_engine_available():
+        return [{"task": "ALL", "jax_available": False}]
+
+    def _cold(g, engine):
+        planner_mod._pair_traffic.cache_clear()
+        planner_mod._cached_place.cache_clear()
+        planner_mod._span_plan_cache.clear()
+        t0 = time.perf_counter()
+        plan = plan_pipeorgan(g, PAPER_HW, Topology.AMP, engine=engine)
+        return time.perf_counter() - t0, plan
+
+    rows = []
+    speedups = []
+    for name, g in all_tasks().items():
+        t_first, _ = _cold(g, "jax")        # jit tracing charged here
+        t_np, p_np = _cold(g, "numpy")
+        t_jax, p_jax = _cold(g, "jax")      # jit warm
+        rel = abs(p_jax.latency_cycles - p_np.latency_cycles) \
+            / max(p_np.latency_cycles, 1e-12)
+        speedup = t_np / t_jax
+        speedups.append(speedup)
+        rows.append({
+            "task": name,
+            "numpy_cold_s": round(t_np, 4),
+            "jax_cold_s": round(t_jax, 4),
+            "jax_first_call_s": round(t_first, 4),
+            "speedup_vs_numpy": round(speedup, 2),
+            "latency_rel_err": rel,
+            "same_segments": [s.segment for s in p_np.segments]
+            == [s.segment for s in p_jax.segments],
+        })
+    gm = math.exp(sum(math.log(x) for x in speedups) / len(speedups))
+    rows.append({"task": "GEOMEAN",
+                 "speedup_vs_numpy": round(gm, 2),
+                 "same_segments": all(r["same_segments"] for r in rows)})
+    return rows
+
+
+def sim_speed_jax() -> List[dict]:
+    """``simulate_segment`` numpy closed-form vs jax max-plus scan engine
+    (kernels/maxplus_scan.py), per topology x depth on the sim_speed
+    segment set.  Both engines replay the same cached burst paths; the
+    jax column is warm-jit (dispatch cost dominates at these sizes, see
+    docs/engines.md)."""
+    from repro.core import DEFAULT_MAX_BURSTS, simulate_segment
+    from repro.core.depth import Segment
+    from repro.core.graph import chain, conv
+    from repro.core.plan_api import jax_engine_available
+    from repro.core.planner import _pipeorgan_df_fn, _plan_segment
+    from repro.core.spatial import SpatialOrg
+
+    if not jax_engine_available():
+        return [{"topology": "ALL", "jax_available": False}]
+
+    def _time(fn, reps=3):
+        best = float("inf")
+        out = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    rows = []
+    speedups = []
+    for topology in (Topology.MESH, Topology.AMP, Topology.TORUS,
+                     Topology.FLATTENED_BUTTERFLY):
+        for depth in (2, 4, 8):
+            g = chain(f"simbench-d{depth}",
+                      [conv(f"c{i}", 1, 32, 32, 16, 16, r=3)
+                       for i in range(depth)])
+            org = (SpatialOrg.CHECKERBOARD_2D if depth >= 4
+                   else SpatialOrg.FINE_STRIPED_1D)
+            plan = _plan_segment(g, Segment(0, depth), PAPER_HW, topology,
+                                 _pipeorgan_df_fn, org, False)
+            simulate_segment(plan, PAPER_HW, topology,
+                             max_bursts=DEFAULT_MAX_BURSTS, engine="jax")
+            t_np, sim_np = _time(lambda: simulate_segment(
+                plan, PAPER_HW, topology, max_bursts=DEFAULT_MAX_BURSTS,
+                engine="numpy"))
+            t_jax, sim_jax = _time(lambda: simulate_segment(
+                plan, PAPER_HW, topology, max_bursts=DEFAULT_MAX_BURSTS,
+                engine="jax"))
+            rel = abs(sim_jax.latency_cycles - sim_np.latency_cycles) \
+                / max(sim_np.latency_cycles, 1e-12)
+            speedup = t_np / t_jax
+            speedups.append(speedup)
+            rows.append({
+                "topology": topology.value, "depth": depth,
+                "org": org.value,
+                "numpy_ms": round(t_np * 1e3, 3),
+                "jax_ms": round(t_jax * 1e3, 3),
+                "speedup_vs_numpy": round(speedup, 2),
+                "latency_rel_err": rel,
+                "link_loads_equal": sim_jax.link_loads == sim_np.link_loads,
+            })
+    gm = math.exp(sum(math.log(x) for x in speedups) / len(speedups))
+    rows.append({"topology": "ALL",
+                 "geomean_speedup_vs_numpy": round(gm, 2),
+                 "min_speedup_vs_numpy": round(min(speedups), 2)})
+    return rows
+
+
 def plan_artifact() -> List[dict]:
     """Artifact persistence vs re-planning, per XR-bench task: the cost of
     ``PlanArtifact`` save + ``PlanStore`` load against a cold re-plan (all
@@ -490,6 +605,8 @@ FIGURES = {
     "amp_ablation": amp_ablation,
     "simulator_validation": simulator_validation,
     "planner_speed": planner_speed,
+    "planner_speed_jax": planner_speed_jax,
     "sim_speed": sim_speed,
+    "sim_speed_jax": sim_speed_jax,
     "plan_artifact": plan_artifact,
 }

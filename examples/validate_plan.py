@@ -38,6 +38,13 @@ if not report.ok:
           "producer-side stall chaining is conservative (docs/simulator.md).")
 
 print("\ncache statistics (hits/misses/size) after plan + validate:")
+# registry entries may be empty (never hit) or unbounded (maxsize=None,
+# e.g. the jax jitted-callable cache) — print them all without assuming
+# every field is a populated int
 for name, ci in planner.cache_info_all().items():
-    print(f"  {name:>12s}: {ci.hits:6d} hits  {ci.misses:6d} misses  "
-          f"{ci.currsize:5d}/{ci.maxsize} entries")
+    hits = ci.hits or 0
+    misses = ci.misses or 0
+    size = "-" if ci.currsize is None else str(ci.currsize)
+    cap = "unbounded" if ci.maxsize is None else str(ci.maxsize)
+    print(f"  {name:>12s}: {hits:6d} hits  {misses:6d} misses  "
+          f"{size:>5s}/{cap} entries")

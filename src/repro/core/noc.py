@@ -487,34 +487,37 @@ def multicast_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
     n_src = src.shape[0]
     per_src = words_per_interval / n_src
     cols_u, col_inv = np.unique(dst[:, 1], return_inverse=True)
-    rows_by_col = [dst[col_inv == ci, 0] for ci in range(cols_u.shape[0])]
+    n_cols = cols_u.shape[0]
+    # consumer rows per column as one padded matrix: a stable argsort of
+    # the column labels keeps each column's rows in original (row-major)
+    # order — the same order the boolean-mask gather produced — and the
+    # sentinel (far larger than any grid row) makes padding slots sort
+    # after every real row in the per-source distance argsort below.
+    order = np.argsort(col_inv, kind="stable")
+    rows_sorted = dst[order, 0]
+    col_sizes = np.bincount(col_inv).astype(np.int64)   # (n_cols,)
+    R = int(col_sizes.max())
+    SENTINEL = np.int64(1) << 40
+    rows_mat = np.full((n_cols, R), SENTINEL, np.int64)
+    cidx, pos_in_col = _expand(col_sizes)
+    rows_mat[cidx, pos_in_col] = rows_sorted
+    # per-source nearest consumer column (first minimum = smaller column,
+    # replicating the scalar min() tie-break) and its distance-ordered
+    # chain; stable argsort keeps equal-distance rows in column order.
     col_idx = np.argmin(np.abs(cols_u[None, :] - src[:, 1:2]), axis=1)
-    col_sizes = np.array([r.shape[0] for r in rows_by_col], np.int64)
+    my_rows = rows_mat[col_idx]                         # (n_src, R)
+    ordm = np.argsort(np.abs(my_rows - src[:, 0:1]), axis=1, kind="stable")
+    chain_rows = np.take_along_axis(my_rows, ordm, axis=1)
+    # scatter every chain hop into source-major order: hop t of source f
+    # goes from hop t-1's consumer (the source PE itself for t = 0) to
+    # chain position t — the vertical store-and-forward walk.
     chain_len = col_sizes[col_idx]
-    offsets = np.cumsum(chain_len) - chain_len
+    fidx, t = _expand(chain_len)
+    o_dr = chain_rows[fidx, t]
+    o_dc = cols_u[col_idx][fidx]
+    o_sr = np.where(t == 0, src[fidx, 0], chain_rows[fidx, np.maximum(t - 1, 0)])
+    o_sc = np.where(t == 0, src[fidx, 1], o_dc)
     total = int(chain_len.sum())
-    o_sr = np.empty(total, np.int64)
-    o_sc = np.empty(total, np.int64)
-    o_dr = np.empty(total, np.int64)
-    o_dc = np.empty(total, np.int64)
-    for ci, c in enumerate(cols_u):
-        mask = col_idx == ci
-        if not mask.any():
-            continue
-        s_sub = src[mask]
-        rows_c = rows_by_col[ci]
-        m, length = s_sub.shape[0], rows_c.shape[0]
-        ordm = np.argsort(np.abs(rows_c[None, :] - s_sub[:, 0:1]), axis=1,
-                          kind="stable")
-        chain_rows = rows_c[ordm]                       # (m, length)
-        f_sr = np.concatenate([s_sub[:, 0:1], chain_rows[:, :-1]], axis=1)
-        f_sc = np.concatenate(
-            [s_sub[:, 1:2], np.full((m, length - 1), c, np.int64)], axis=1)
-        pos = (offsets[mask][:, None] + np.arange(length)[None, :]).ravel()
-        o_sr[pos] = f_sr.ravel()
-        o_sc[pos] = f_sc.ravel()
-        o_dr[pos] = chain_rows.ravel()
-        o_dc[pos] = c
     return FlowBatch(np.stack([o_sr, o_sc], axis=1),
                      np.stack([o_dr, o_dc], axis=1),
                      np.full(total, per_src, np.float64))

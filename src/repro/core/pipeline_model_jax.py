@@ -1,0 +1,361 @@
+"""Batched jax twin of the Fig. 3 interval equations (``pipeline_model``).
+
+``segment_cost`` prices one candidate at a time with Python floats; the
+planner's DP calls it thousands of times per cold plan.  This module
+re-expresses the per-edge interval recurrence as branchless array ops over
+padded slot-DAG tensors so *all* (cut, org, staging) candidates of a span
+batch are priced in one ``jit``-compiled ``vmap`` call:
+
+  * the host (``build_row``) prepares everything that is cheap and
+    irregular — dataflows, granularities, PE allocation, NoC traffic
+    analysis (``_pair_traffic`` stays host-side and lru-cached), DRAM /
+    SRAM byte totals, the compute lower bound;
+  * the device function replays only the sequential part numpy cannot
+    batch: per-edge ``delta`` chaining (producer-side rate floors follow
+    DAG paths), congestion capping, pipeline-fill critical paths and the
+    join drain, unrolled over a padded edge count.
+
+Engine-split idiom: ``pipeline_model.segment_cost`` is the semantic pin;
+``tests/test_engine_parity.py`` holds this module to 1e-6 relative latency
+(bit-level where integer) against it.  Numbers stay float64 — cycle counts
+exceed 2**24, where float32 drops whole cycles — so the module refuses to
+run unless ``jax_enable_x64`` took effect (see ``kernels.maxplus_scan``).
+
+Shape discipline: candidates bucket by padded edge count (powers of two,
+floor 2) and padded batch size (powers of two), so the number of distinct
+jit compilations is O(log^2) in problem size.  ``price_cache_info`` exposes
+the compiled-callable cache to ``Planner.cache_registry()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dataflow import Dataflow
+from .granularity import Granularity
+from .graph import Op
+from .hwconfig import HWConfig
+from .noc import TrafficStats
+from .pipeline_model import (SegmentCost, chain_edges, edge_burst_count,
+                             op_compute_cycles, op_work, segment_cost,
+                             weight_dram_traffic)
+
+try:                                    # jax is optional at this layer
+    import jax
+    import jax.numpy as jnp
+    from ..kernels.maxplus_scan import ensure_x64
+    ensure_x64()                        # x64 check at engine import
+    _READY, _REASON = True, ""
+except Exception as exc:                # noqa: BLE001 - any import failure
+    _READY, _REASON = False, f"{type(exc).__name__}: {exc}"
+
+
+def is_available() -> bool:
+    """True when jax imported and float64 took effect."""
+    return _READY
+
+
+def require() -> None:
+    if not _READY:
+        raise RuntimeError(
+            f"jax pricing engine unavailable ({_REASON}); "
+            "use engine='numpy'")
+
+
+# ---------------------------------------------------------------------------
+# host-side candidate rows
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PriceRow:
+    """One candidate's device inputs + host passthrough scalars.
+
+    Arrays are length ``n_edges``; ``inc[k, d]`` marks edge d as incoming
+    to edge k's producer slot (the producer-side rate-chain adjacency).
+    ``host_cost`` short-circuits depth-1 candidates, which have no
+    recurrence and are priced entirely on the host.
+    """
+    n_edges: int
+    t_prod: np.ndarray
+    t_cons: np.ndarray
+    n_bursts: np.ndarray        # float64, each >= 1
+    fill: np.ndarray
+    load: np.ndarray
+    hops: np.ndarray
+    hop_unit: np.ndarray        # per-burst hop energy of the edge's flows
+    stats_present: np.ndarray   # bool
+    final: np.ndarray           # bool: edge drains into the sink slot
+    inc: np.ndarray             # bool (E, E)
+    mem_stall: float
+    # host passthrough for SegmentCost assembly
+    dram_bytes: float
+    sram_bytes: float
+    comp_lb: float
+    dram_energy: float
+    sram_energy: float
+    intervals: List[int]
+    host_cost: Optional[SegmentCost] = None
+
+
+def build_row(
+    ops: Sequence[Op],
+    dataflows: Sequence[Dataflow],
+    grans: Sequence[Granularity],
+    pe_alloc: Sequence[int],
+    hw: HWConfig,
+    noc_stats: Optional[Sequence[Optional[TrafficStats]]],
+    via_global_buffer: bool,
+    external_in_bytes: float,
+    external_out_bytes: float,
+    skip_in_bytes: float = 0.0,
+    array_pes: Optional[int] = None,
+    edges: Optional[Sequence[Tuple[int, int]]] = None,
+) -> PriceRow:
+    """Mirror of ``segment_cost``'s argument list -> one device row."""
+    D = len(ops)
+    if array_pes is None:
+        array_pes = hw.num_pes
+    if D == 1:
+        cost = segment_cost(ops, dataflows, grans, pe_alloc, hw, noc_stats,
+                            via_global_buffer, external_in_bytes,
+                            external_out_bytes, skip_in_bytes,
+                            array_pes=array_pes, edges=edges)
+        return PriceRow(0, *(np.zeros(0),) * 8, np.zeros(0, bool),
+                        np.zeros((0, 0), bool), 0.0, cost.dram_bytes,
+                        cost.sram_bytes, cost.compute_cycles,
+                        cost.dram_energy, cost.sram_energy,
+                        list(cost.intervals), host_cost=cost)
+
+    edge_list = tuple(edges) if edges is not None else chain_edges(D)
+    E = len(edge_list)
+    assert len(grans) == E
+
+    ext_dram = external_in_bytes + external_out_bytes + skip_in_bytes
+    dram = ext_dram + weight_dram_traffic(ops, dataflows, hw, pe_alloc)
+    mem_stall = dram / hw.dram_bw_bytes_per_cycle
+    sink = D - 1
+    interior_bytes = sum(ops[u].output_volume() for u in range(D)
+                         if u != sink) * hw.bytes_per_word
+    sram_traffic = dram + (2.0 * interior_bytes if via_global_buffer
+                           else 0.0)
+    comp_lb = max(op_compute_cycles(op, p, hw)
+                  for op, p in zip(ops, pe_alloc))
+
+    incoming: Dict[int, List[int]] = {}
+    for k, (u, v) in enumerate(edge_list):
+        incoming.setdefault(v, []).append(k)
+
+    t_prod = np.zeros(E)
+    t_cons = np.zeros(E)
+    n_bursts = np.ones(E)
+    fill = np.zeros(E)
+    load = np.zeros(E)
+    hops = np.zeros(E)
+    hop_unit = np.zeros(E)
+    sp = np.zeros(E, bool)
+    fin = np.zeros(E, bool)
+    inc = np.zeros((E, E), bool)
+    intervals: List[int] = []
+    for k, (u, v) in enumerate(edge_list):
+        outv = max(1, ops[u].output_volume())
+        n_src = max(1, pe_alloc[u])
+        n_dst = max(1, pe_alloc[v])
+        n_k = edge_burst_count(outv, n_src)
+        intervals.append(n_k)
+        n_bursts[k] = float(n_k)
+        t_prod[k] = op_work(ops[u], hw) / outv / hw.dot_product_size
+        inv = max(1, ops[v].input_volume())
+        t_cons[k] = (n_src * op_work(ops[v], hw) / inv
+                     / (n_dst * hw.dot_product_size))
+        fill[k] = float(min(n_k, max(1, math.ceil(grans[k].elements
+                                                  / n_src))))
+        stats = (noc_stats[k]
+                 if (noc_stats is not None and not via_global_buffer)
+                 else None)
+        if stats is not None:
+            sp[k] = True
+            load[k] = stats.worst_channel_load
+            hops[k] = float(stats.max_path_hops)
+            hop_unit[k] = stats.hop_energy(hw)
+        fin[k] = (v == sink)
+        for d in incoming.get(u, ()):
+            inc[k, d] = True
+
+    if not fin.any():
+        raise ValueError("pipeline DAG has no edge into the final slot")
+    return PriceRow(E, t_prod, t_cons, n_bursts, fill, load, hops,
+                    hop_unit, sp, fin, inc, mem_stall, dram,
+                    sram_traffic, comp_lb, dram * hw.e_dram,
+                    sram_traffic * hw.e_sram, intervals)
+
+
+# ---------------------------------------------------------------------------
+# device function: the unrolled interval recurrence
+# ---------------------------------------------------------------------------
+
+if _READY:
+
+    def _make_price_fn(E: int):
+        """vmap-of-unrolled-recurrence, specialized to a padded edge count.
+
+        The loop body is the branchless rewrite of ``_dag_segment_cost``'s
+        per-edge block: ``jnp.where`` replaces the stats/congestion
+        branches, masked maxima replace the ``incoming`` generator maxima
+        (base 0.0, matching ``default=0.0``), and the congestion cap is
+        ``TrafficStats.interval_comm_delay`` verbatim — same IEEE ops in
+        the same order, so float64 results match the host to the last ulp
+        except where XLA contracts a mul-add (covered by the 1e-6 parity
+        band; the boolean ``congested`` path has no contractible term).
+        """
+
+        def one(t_prod, t_cons, n, fill, load, hops, hop_unit, sp, fin,
+                inc, mem_stall):
+            deltas = jnp.zeros(E, jnp.float64)
+            pfill = jnp.zeros(E, jnp.float64)
+            congested = jnp.zeros((), jnp.bool_)
+            max_hops = jnp.zeros((), jnp.float64)
+            hop_e = jnp.zeros((), jnp.float64)
+            for k in range(E):
+                prod_side = jnp.max(
+                    jnp.where(inc[k], deltas * (n / n[k]), 0.0))
+                ci = jnp.maximum(t_prod[k],
+                                 jnp.maximum(t_cons[k], prod_side))
+                over = sp[k] & (load[k] > ci)
+                capped = jnp.minimum(
+                    load[k] * jnp.maximum(1.0, ci),
+                    jnp.maximum(load[k] * 2.0, load[k] + hops[k] + ci))
+                comm = jnp.where(over, capped, ci)
+                congested = congested | over
+                max_hops = jnp.maximum(max_hops,
+                                       jnp.where(sp[k], hops[k], 0.0))
+                hop_e = hop_e + jnp.where(sp[k], hop_unit[k] * n[k], 0.0)
+                delta = jnp.maximum(ci, comm) + mem_stall / n[k]
+                upstream = jnp.max(jnp.where(inc[k], pfill, 0.0))
+                deltas = deltas.at[k].set(delta)
+                pfill = pfill.at[k].set(upstream + delta * fill[k])
+            latency = (jnp.max(jnp.where(fin, pfill + n * deltas,
+                                         -jnp.inf))
+                       + max_hops)
+            return latency, congested, hop_e, deltas
+
+        return jax.jit(jax.vmap(one, in_axes=(0,) * 11))
+
+
+_PRICE_FNS: Dict[int, object] = {}
+_SHAPES_SEEN: Dict[Tuple[int, int], int] = {}
+_HITS = 0
+_MISSES = 0
+
+
+def price_cache_info() -> Tuple[int, int, Optional[int], int]:
+    """(hits, misses, maxsize, currsize) of the jitted-callable cache —
+    the shape signature a call reuses (hit) or compiles (miss).  Feeds
+    ``Planner.cache_registry()`` like the lru_cache providers."""
+    return (_HITS, _MISSES, None, len(_SHAPES_SEEN))
+
+
+def price_cache_clear() -> None:
+    global _HITS, _MISSES
+    _PRICE_FNS.clear()
+    _SHAPES_SEEN.clear()
+    _HITS = _MISSES = 0
+
+
+def _bucket_edges(E: int) -> int:
+    return max(2, 1 << (E - 1).bit_length())
+
+
+def _bucket_batch(B: int) -> int:
+    return 1 << (B - 1).bit_length()
+
+
+def price_rows(rows: Sequence[PriceRow]) -> List[SegmentCost]:
+    """Price a batch of candidates; one device call per edge bucket.
+
+    Depth-1 rows pass through their host cost.  The rest are grouped by
+    padded edge count, padded to a power-of-two batch, and priced with the
+    bucket's jitted callable; padded edges/rows are inert (t = 0, n = 1,
+    masks off) and sliced away before ``SegmentCost`` assembly.
+    """
+    require()
+    global _HITS, _MISSES
+    out: List[Optional[SegmentCost]] = [None] * len(rows)
+    groups: Dict[int, List[int]] = {}
+    for i, row in enumerate(rows):
+        if row.host_cost is not None:
+            out[i] = row.host_cost
+        else:
+            groups.setdefault(_bucket_edges(row.n_edges), []).append(i)
+
+    for E_pad, idxs in sorted(groups.items()):
+        B = len(idxs)
+        B_pad = _bucket_batch(B)
+        t_prod = np.zeros((B_pad, E_pad))
+        t_cons = np.zeros((B_pad, E_pad))
+        n = np.ones((B_pad, E_pad))
+        fill = np.zeros((B_pad, E_pad))
+        load = np.zeros((B_pad, E_pad))
+        hops = np.zeros((B_pad, E_pad))
+        hop_unit = np.zeros((B_pad, E_pad))
+        sp = np.zeros((B_pad, E_pad), bool)
+        fin = np.zeros((B_pad, E_pad), bool)
+        inc = np.zeros((B_pad, E_pad, E_pad), bool)
+        mem_stall = np.zeros(B_pad)
+        for b, i in enumerate(idxs):
+            r = rows[i]
+            e = r.n_edges
+            t_prod[b, :e] = r.t_prod
+            t_cons[b, :e] = r.t_cons
+            n[b, :e] = r.n_bursts
+            fill[b, :e] = r.fill
+            load[b, :e] = r.load
+            hops[b, :e] = r.hops
+            hop_unit[b, :e] = r.hop_unit
+            sp[b, :e] = r.stats_present
+            fin[b, :e] = r.final
+            inc[b, :e, :e] = r.inc
+            mem_stall[b] = r.mem_stall
+
+        key = (E_pad, B_pad)
+        if key in _SHAPES_SEEN:
+            _HITS += 1
+        else:
+            _MISSES += 1
+        _SHAPES_SEEN[key] = _SHAPES_SEEN.get(key, 0) + 1
+        fn = _PRICE_FNS.get(E_pad)
+        if fn is None:
+            fn = _PRICE_FNS[E_pad] = _make_price_fn(E_pad)
+        lat, congested, hop_e, deltas = fn(
+            jnp.asarray(t_prod), jnp.asarray(t_cons), jnp.asarray(n),
+            jnp.asarray(fill), jnp.asarray(load), jnp.asarray(hops),
+            jnp.asarray(hop_unit), jnp.asarray(sp), jnp.asarray(fin),
+            jnp.asarray(inc), jnp.asarray(mem_stall))
+        lat = np.asarray(lat)
+        congested = np.asarray(congested)
+        hop_e = np.asarray(hop_e)
+        deltas = np.asarray(deltas)
+        for b, i in enumerate(idxs):
+            r = rows[i]
+            out[i] = SegmentCost(
+                latency_cycles=float(lat[b]),
+                compute_cycles=r.comp_lb,
+                dram_bytes=r.dram_bytes,
+                sram_bytes=r.sram_bytes,
+                noc_hop_energy=float(hop_e[b]),
+                dram_energy=r.dram_energy,
+                sram_energy=r.sram_energy,
+                interval_delays=[float(x) for x in
+                                 deltas[b, :r.n_edges]],
+                intervals=list(r.intervals),
+                congested=bool(congested[b]))
+    return out  # type: ignore[return-value]
+
+
+def segment_cost_jax(*args, **kwargs) -> SegmentCost:
+    """Single-candidate convenience: ``segment_cost`` signature, jax
+    pricing.  Batch-of-one — prefer ``price_rows`` on the hot path."""
+    return price_rows([build_row(*args, **kwargs)])[0]

@@ -234,6 +234,7 @@ class StrategySpec:
     takes_topology: bool = True
     supports_sim_check: bool = False
     supports_objective: bool = False
+    supports_engine: bool = False
 
     def plan(self, request: "PlanRequest"):
         """Invoke the strategy function with exactly the arguments its
@@ -249,6 +250,8 @@ class StrategySpec:
             kwargs["sim_check"] = request.sim_check
             if request.max_bursts is not None:
                 kwargs["max_bursts"] = request.max_bursts
+        if self.supports_engine:
+            kwargs["engine"] = request.engine
         return self.fn(*args, **kwargs)
 
 
@@ -260,20 +263,23 @@ def register_strategy(name: str, fn: Callable[..., object],
                       takes_topology: bool = True,
                       supports_sim_check: bool = False,
                       supports_objective: bool = False,
+                      supports_engine: bool = False,
                       overwrite: bool = False) -> StrategySpec:
     """Register a planning strategy under ``name``.
 
     ``fn(graph, hw[, topology][, objective=, constraints=][, sim_check=,
-    max_bursts=])`` must return a ``PlanResult``; the keyword groups are
-    passed only when the matching ``supports_*`` capability is declared.
-    Third-party strategies registered here are first-class citizens of
-    ``PlanRequest``/``Planner`` — same cache, same validation path.
+    max_bursts=][, engine=])`` must return a ``PlanResult``; the keyword
+    groups are passed only when the matching ``supports_*`` capability is
+    declared.  Third-party strategies registered here are first-class
+    citizens of ``PlanRequest``/``Planner`` — same cache, same validation
+    path.
     """
     if name in _STRATEGY_REGISTRY and not overwrite:
         raise ValueError(f"strategy {name!r} already registered "
                          "(pass overwrite=True to replace)")
     spec = StrategySpec(name, fn, default_topology, takes_topology,
-                        supports_sim_check, supports_objective)
+                        supports_sim_check, supports_objective,
+                        supports_engine)
     _STRATEGY_REGISTRY[name] = spec
     return spec
 
@@ -327,6 +333,20 @@ def cache_registry() -> Dict[str, Callable[[], Tuple[int, int, int, int]]]:
 # ---------------------------------------------------------------------------
 
 
+def jax_engine_available() -> bool:
+    """True when the jax pricing engine can run (jax importable and
+    float64 took effect).  The import is attempted lazily — callers that
+    never touch ``engine="auto"|"jax"`` never pay it."""
+    try:
+        from . import pipeline_model_jax
+    except Exception:               # noqa: BLE001 - any import failure
+        return False
+    return pipeline_model_jax.is_available()
+
+
+ENGINES = ("auto", "numpy", "jax")
+
+
 def graph_fingerprint(g: Graph) -> Tuple:
     """Stable, hashable identity of a graph's structure and shapes.
 
@@ -360,6 +380,15 @@ class PlanRequest:
     ``max_bursts=None`` means "the simulator default"
     (``DEFAULT_MAX_BURSTS``) wherever the request drives a simulation
     (``sim_check`` re-ranking, ``Planner.validate``).
+
+    ``engine`` selects the candidate pricer for engine-capable strategies
+    (``supports_engine``): ``"auto"`` (default) resolves at construction
+    to ``"jax"`` when the jax engine is importable with float64 enabled,
+    else ``"numpy"``; the resolved name is what identity (``key``,
+    ``cache_token``) and serialization carry, so a stored plan records
+    the engine that priced it.  An explicit ``"jax"`` raises when the
+    engine cannot run; any explicit non-auto engine raises for
+    strategies without the capability.
     """
     graph: Graph
     hw: HWConfig = PAPER_HW
@@ -369,6 +398,7 @@ class PlanRequest:
     constraints: Tuple[Constraint, ...] = ()
     sim_check: bool = False
     max_bursts: Optional[int] = None
+    engine: str = "auto"
 
     def __post_init__(self) -> None:
         spec = get_strategy(self.strategy)
@@ -387,6 +417,22 @@ class PlanRequest:
             raise ValueError(
                 f"strategy {self.strategy!r} does not support custom "
                 "objectives/constraints (supports_objective=False)")
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"one of {ENGINES}")
+        if spec.supports_engine:
+            if self.engine == "jax" and not jax_engine_available():
+                raise ValueError(
+                    "engine='jax' requested but the jax pricing engine "
+                    "cannot run (jax missing or float64 unavailable); "
+                    "use engine='numpy' or 'auto'")
+            if self.engine == "auto":
+                resolved = "jax" if jax_engine_available() else "numpy"
+                object.__setattr__(self, "engine", resolved)
+        elif self.engine != "auto":
+            raise ValueError(
+                f"strategy {self.strategy!r} does not support engine "
+                "selection (supports_engine=False)")
         object.__setattr__(self, "_fingerprint",
                            graph_fingerprint(self.graph))
 
@@ -412,7 +458,7 @@ class PlanRequest:
         """The single cache key: everything that determines the plan."""
         return (self.fingerprint, self.hw, self.topology, self.strategy,
                 self.objective, self.constraints, self.sim_check,
-                self.plan_max_bursts)
+                self.plan_max_bursts, self.engine)
 
     def __hash__(self) -> int:
         return hash(self.key)
@@ -436,6 +482,7 @@ class PlanRequest:
                             for c in self.constraints],
             "sim_check": self.sim_check,
             "max_bursts": self.plan_max_bursts,
+            "engine": self.engine,
         }
 
     def cache_token(self) -> str:

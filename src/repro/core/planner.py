@@ -31,12 +31,14 @@ import collections.abc
 import dataclasses
 import functools
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import sys
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .dataflow import Dataflow, choose_dataflow
 from .depth import Segment, segment_graph
 from .plan_api import (Constraint, DEFAULT_OBJECTIVE, Objective,
-                       register_cache, register_strategy)
+                       jax_engine_available, register_cache,
+                       register_strategy)
 from .graph import (BranchRegion, COMPLEX_KINDS, Graph, Op, OpKind,
                     branch_regions)
 from .granularity import Granularity, finest_granularity
@@ -169,11 +171,97 @@ def _pair_traffic(org: SpatialOrg, pe_alloc: Tuple[int, ...], j: int,
     return analyze(FlowBatch.concat(parts), hw, topology)
 
 
-def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
+@dataclasses.dataclass
+class _SegPrep:
+    """Host-side half of ``_plan_segment``: everything up to pricing.
+
+    Splitting prep from pricing lets the jax engine materialize MANY
+    spans' prep as struct-of-arrays rows and price them in one jitted
+    vmap call (``_segment_planner(...).prime``) instead of once per
+    ``segment_cost`` invocation."""
+    seg: Segment
+    ops: List[Op]
+    dfs: List[Dataflow]
+    grans: List[Granularity]
+    pe_alloc: List[int]
+    org: Optional[SpatialOrg]
+    placement: Optional[Placement]
+    worst: Optional[TrafficStats]
+    stats: Optional[List[Optional[TrafficStats]]]
+    via_gb: bool
+    ext_in: float
+    ext_out: float
+    skip_in: float
+    usable: int
+    intra_skips: List[Tuple[int, int, int]]
+    traffic_scale: float
+    # branch-parallel candidates carry their explicit slot DAG
+    edges: Tuple[Tuple[int, int], ...] = ()
+    branches: Tuple[Tuple[int, ...], ...] = ()
+
+
+def _finish_segment(prep: _SegPrep, cost: SegmentCost) -> SegmentPlan:
+    return SegmentPlan(prep.seg, list(prep.ops), prep.dfs, prep.grans,
+                       prep.pe_alloc, prep.org, prep.placement, prep.worst,
+                       cost, intra_skips=tuple(prep.intra_skips),
+                       skip_in_bytes=prep.skip_in,
+                       traffic_scale=prep.traffic_scale,
+                       array_pes=prep.usable, edges=prep.edges,
+                       branches=prep.branches)
+
+
+# --- the jax pricing engine is imported lazily: "numpy" planning must not
+# pay (or require) the jax import --------------------------------------------
+
+
+def _jax_model():
+    from . import pipeline_model_jax
+    pipeline_model_jax.require()
+    return pipeline_model_jax
+
+
+def resolve_engine(engine: str) -> str:
+    """Public engine names -> internal engine ids.
+
+    ``"numpy"`` is the vectorized host engine (internal id ``"batch"``,
+    the historical default); ``"jax"`` requires the jax pricer and raises
+    a clear error when it cannot run; ``"auto"`` picks jax when available.
+    The internal ids ``"batch"``/``"reference"`` pass through for the
+    benchmark harness.
+    """
+    if engine in ("batch", "reference"):
+        return engine
+    if engine == "numpy":
+        return "batch"
+    if engine == "jax":
+        _jax_model()                # raises with the unavailability reason
+        return "jax"
+    if engine == "auto":
+        return "jax" if jax_engine_available() else "batch"
+    raise ValueError(f"unknown engine {engine!r}; "
+                     "one of ('auto', 'numpy', 'jax')")
+
+
+def _price_row(prep: _SegPrep, hw: HWConfig):
+    m = _jax_model()
+    return m.build_row(prep.ops, prep.dfs, prep.grans, prep.pe_alloc, hw,
+                       prep.stats, prep.via_gb, prep.ext_in, prep.ext_out,
+                       prep.skip_in, array_pes=prep.usable,
+                       edges=prep.edges or None)
+
+
+def _host_cost(prep: _SegPrep, hw: HWConfig) -> SegmentCost:
+    return segment_cost(prep.ops, prep.dfs, prep.grans, prep.pe_alloc, hw,
+                        prep.stats, prep.via_gb, prep.ext_in, prep.ext_out,
+                        prep.skip_in, array_pes=prep.usable,
+                        edges=prep.edges or None)
+
+
+def _prep_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
                   dataflow_fn, force_org: Optional[SpatialOrg],
                   force_gb: Optional[bool],
                   util_fn=None, traffic_scale: float = 1.0,
-                  engine: str = "batch") -> SegmentPlan:
+                  engine: str = "batch") -> _SegPrep:
     ops = g.ops[seg.start:seg.stop]
     budget = hw.sram_bytes // max(1, seg.depth)
     dfs = [dataflow_fn(op, hw, i, budget) for i, op in enumerate(ops)]
@@ -207,13 +295,9 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     skip_in = crossing * hw.bytes_per_word
 
     if seg.depth == 1:
-        cost = segment_cost(ops, dfs, grans, pe_alloc, hw, None, True,
-                            ext_in, ext_out, skip_in, array_pes=usable)
-        return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc,
-                           None, None, None, cost,
-                           intra_skips=tuple(intra_skips),
-                           skip_in_bytes=skip_in,
-                           traffic_scale=traffic_scale, array_pes=usable)
+        return _SegPrep(seg, ops, dfs, grans, pe_alloc, None, None, None,
+                        None, True, ext_in, ext_out, skip_in, usable,
+                        intra_skips, traffic_scale)
 
     # organization choice
     gran_bytes = max(gr.elements for gr in grans) * hw.bytes_per_word
@@ -227,7 +311,7 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     if any(not gr.pipelinable for gr in grans) or disconnected:
         via_gb = True  # fall back to staging through the global buffer
 
-    if engine == "batch":
+    if engine != "reference":
         placement = dataclasses.replace(
             _cached_place(org, tuple(pe_alloc), hw),
             via_global_buffer=via_gb)
@@ -248,13 +332,13 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     n_bursts = [max(1, math.ceil(ops[j].output_volume()
                                  / max(1, pe_alloc[j])))
                 for j in range(len(grans))]
-    if via_gb and engine == "batch":
+    if via_gb and engine != "reference":
         # coarse pipelining stages through the global buffer: the Fig. 3
         # cost model never consults NoC stats for it, so skip the traffic
         # analysis outright (a large share of planner time on deep spans)
         per_pair_stats = None
         worst = None
-    elif engine == "batch":
+    elif engine != "reference":
         per_pair_stats = [
             _pair_traffic(org, tuple(pe_alloc), j,
                           float(pe_alloc[j]) * traffic_scale,
@@ -275,13 +359,24 @@ def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
             per_pair_stats.append(analyze_reference(flows, hw, topology))
         worst = max(per_pair_stats, key=lambda st: st.worst_channel_load)
 
-    cost = segment_cost(ops, dfs, grans, pe_alloc, hw, per_pair_stats,
-                        via_gb, ext_in, ext_out, skip_in, array_pes=usable)
-    return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc, org,
-                       placement, worst, cost,
-                       intra_skips=tuple(intra_skips),
-                       skip_in_bytes=skip_in,
-                       traffic_scale=traffic_scale, array_pes=usable)
+    return _SegPrep(seg, ops, dfs, grans, pe_alloc, org, placement, worst,
+                    per_pair_stats, via_gb, ext_in, ext_out, skip_in,
+                    usable, intra_skips, traffic_scale)
+
+
+def _plan_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
+                  dataflow_fn, force_org: Optional[SpatialOrg],
+                  force_gb: Optional[bool],
+                  util_fn=None, traffic_scale: float = 1.0,
+                  engine: str = "batch") -> SegmentPlan:
+    prep = _prep_segment(g, seg, hw, topology, dataflow_fn, force_org,
+                         force_gb, util_fn=util_fn,
+                         traffic_scale=traffic_scale, engine=engine)
+    if engine == "jax":
+        cost = _jax_model().price_rows([_price_row(prep, hw)])[0]
+    else:
+        cost = _host_cost(prep, hw)
+    return _finish_segment(prep, cost)
 
 
 # ---------------------------------------------------------------------------
@@ -432,13 +527,12 @@ def edge_flow_batch(placement: Placement,
     return FlowBatch.concat(parts)
 
 
-def _plan_branch_segment(g: Graph, region: BranchRegion, hw: HWConfig,
+def _prep_branch_segment(g: Graph, region: BranchRegion, hw: HWConfig,
                          topology: Topology, df_fn,
                          force_org: Optional[SpatialOrg] = None,
                          force_gb: Optional[bool] = None,
-                         traffic_scale: float = 1.0
-                         ) -> Optional[SegmentPlan]:
-    """Price one co-placed branch region as a single pipeline segment.
+                         traffic_scale: float = 1.0) -> Optional[_SegPrep]:
+    """Host-side half of one co-placed branch-region candidate.
 
     Returns ``None`` when the region cannot be placed (substrate too small
     for the branch geometry) — the DP then simply keeps the serialized
@@ -505,18 +599,32 @@ def _plan_branch_segment(g: Graph, region: BranchRegion, hw: HWConfig,
             for k in range(len(edges))]
         worst = max(per_edge_stats, key=lambda st: st.worst_channel_load)
 
-    cost = segment_cost(ops, dfs, grans, pe_alloc, hw, per_edge_stats,
-                        via_gb, ext_in, ext_out, skip_in, array_pes=usable,
-                        edges=edges)
-    return SegmentPlan(seg, list(ops), dfs, grans, pe_alloc, org,
-                       placement, worst, cost,
-                       intra_skips=intra_skips, skip_in_bytes=skip_in,
-                       traffic_scale=traffic_scale, array_pes=usable,
-                       edges=edges, branches=seg.branches)
+    return _SegPrep(seg, ops, dfs, grans, pe_alloc, org, placement, worst,
+                    per_edge_stats, via_gb, ext_in, ext_out, skip_in,
+                    usable, list(intra_skips), traffic_scale,
+                    edges=edges, branches=seg.branches)
+
+
+def _plan_branch_segment(g: Graph, region: BranchRegion, hw: HWConfig,
+                         topology: Topology, df_fn,
+                         force_org: Optional[SpatialOrg] = None,
+                         force_gb: Optional[bool] = None,
+                         traffic_scale: float = 1.0,
+                         engine: str = "batch") -> Optional[SegmentPlan]:
+    prep = _prep_branch_segment(g, region, hw, topology, df_fn,
+                                force_org, force_gb, traffic_scale)
+    if prep is None:
+        return None
+    if engine == "jax":
+        cost = _jax_model().price_rows([_price_row(prep, hw)])[0]
+    else:
+        cost = _host_cost(prep, hw)
+    return _finish_segment(prep, cost)
 
 
 def _region_plans(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
-                  df_fn) -> Dict[int, List[SegmentPlan]]:
+                  df_fn, engine: str = "batch"
+                  ) -> Dict[int, List[SegmentPlan]]:
     """Branch-segment DP candidates inside one stage-1 segment, keyed by
     their start position.
 
@@ -531,8 +639,8 @@ def _region_plans(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
     Shape-identical (org, staging) pairs (e.g. the two blocked styles
     produce one banded grid) are deduplicated by their placement grid.
     """
-    out: Dict[int, List[SegmentPlan]] = {}
     seen: set = set()
+    preps: List[_SegPrep] = []
     for r in branch_regions(g, seg.start, seg.stop, hw.max_depth):
         if len(r.branches) < 2 and not r.fork_to_join:
             continue
@@ -549,16 +657,27 @@ def _region_plans(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
             grids: set = set()
             for org in SpatialOrg:
                 for gb in (False, True):
-                    p = _plan_branch_segment(g, v, hw, topology, df_fn,
-                                             force_org=org, force_gb=gb)
-                    if p is None:
+                    prep = _prep_branch_segment(g, v, hw, topology, df_fn,
+                                                force_org=org, force_gb=gb)
+                    if prep is None:
                         continue
-                    gkey = (p.placement.grid.tobytes(),
-                            p.placement.via_global_buffer)
+                    gkey = (prep.placement.grid.tobytes(),
+                            prep.placement.via_global_buffer)
                     if gkey in grids:
                         continue
                     grids.add(gkey)
-                    out.setdefault(v.start, []).append(p)
+                    preps.append(prep)
+    # price the whole (region, org, staging) enumeration in one call on
+    # the jax engine; one host segment_cost call each otherwise
+    if engine == "jax" and preps:
+        m = _jax_model()
+        costs = m.price_rows([_price_row(p, hw) for p in preps])
+    else:
+        costs = [_host_cost(p, hw) for p in preps]
+    out: Dict[int, List[SegmentPlan]] = {}
+    for prep, cost in zip(preps, costs):
+        out.setdefault(prep.seg.start, []).append(
+            _finish_segment(prep, cost))
     return out
 
 
@@ -615,7 +734,12 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
     *content* so repeated same-shape layer runs plan once per process.
     """
     memo: Dict[Tuple[int, int], SegmentPlan] = {}
-    cacheable = engine == "batch" and df_fn is _pipeorgan_df_fn
+    cacheable = engine in ("batch", "jax") and df_fn is _pipeorgan_df_fn
+
+    def _store_cached(sig: Tuple, plan: SegmentPlan) -> None:
+        _span_plan_cache[sig] = plan
+        if len(_span_plan_cache) > _SPAN_CACHE_MAX:
+            _span_plan_cache.popitem(last=False)
 
     def plan_ij(i: int, j: int) -> SegmentPlan:
         key = (i, j)
@@ -623,14 +747,15 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
             return memo[key]
         seg = Segment(i, j)
         if cacheable:
-            sig = (_span_signature(g, seg), hw, topology)
+            # engine is part of the content key: the two engines' costs
+            # agree to ~1e-9 relative, not bit-for-bit, and the caches
+            # must never cross-pollinate an exact-equality guard
+            sig = (_span_signature(g, seg), hw, topology, engine)
             hit = _span_plan_cache.get(sig)
             if hit is None:
                 plan = _plan_segment(g, seg, hw, topology, df_fn,
                                      None, None, engine=engine)
-                _span_plan_cache[sig] = plan
-                if len(_span_plan_cache) > _SPAN_CACHE_MAX:
-                    _span_plan_cache.popitem(last=False)
+                _store_cached(sig, plan)
             else:
                 _span_plan_cache.move_to_end(sig)
                 plan = _rebind_span(hit, g, i, j)
@@ -640,10 +765,79 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
         memo[key] = plan
         return plan
 
+    def prime(spans: Iterable[Tuple[int, int]]) -> None:
+        """Batch-price many spans in one jitted vmap call (jax engine).
+
+        The numpy engine prices candidates one ``segment_cost`` call at a
+        time, so priming is a no-op there.  For jax, every span not
+        already memoized (or span-content cached) is prepped on the host,
+        materialized as a struct-of-arrays row, and priced in a single
+        ``price_rows`` dispatch — the tentpole's batched inner loop.
+        Shape-identical spans are priced once and rebound.
+        """
+        if engine != "jax":
+            return
+        todo: List[Tuple[int, int, Optional[Tuple]]] = []
+        first_of_sig: Dict[Tuple, int] = {}
+        aliases: List[Tuple[int, int, int]] = []   # (i, j, todo index)
+        for i, j in spans:
+            if (i, j) in memo:
+                continue
+            sig = None
+            if cacheable:
+                seg = Segment(i, j)
+                sig = (_span_signature(g, seg), hw, topology, engine)
+                hit = _span_plan_cache.get(sig)
+                if hit is not None:
+                    _span_plan_cache.move_to_end(sig)
+                    memo[(i, j)] = _rebind_span(hit, g, i, j)
+                    continue
+                if sig in first_of_sig:
+                    aliases.append((i, j, first_of_sig[sig]))
+                    continue
+                first_of_sig[sig] = len(todo)
+            todo.append((i, j, sig))
+        if not todo:
+            return
+        m = _jax_model()
+        preps = [_prep_segment(g, Segment(i, j), hw, topology, df_fn,
+                               None, None, engine=engine)
+                 for i, j, _ in todo]
+        costs = m.price_rows([_price_row(p, hw) for p in preps])
+        plans: List[SegmentPlan] = []
+        for (i, j, sig), prep, cost in zip(todo, preps, costs):
+            plan = _finish_segment(prep, cost)
+            plans.append(plan)
+            memo[(i, j)] = plan
+            if sig is not None:
+                _store_cached(sig, plan)
+        for i, j, t in aliases:
+            memo[(i, j)] = _rebind_span(plans[t], g, i, j)
+
+    plan_ij.prime = prime
     return plan_ij
 
 
 Candidate = Tuple[float, float, Tuple[SegmentPlan, ...]]
+
+
+def _search_spans(seg: Segment, max_span: int) -> List[Tuple[int, int]]:
+    """Every (i, j) span the uniform enumeration + cut-point DP will
+    price for ``seg`` — the prime set for batched jax pricing."""
+    spans = set()
+    for d in {1, 2, 4, 8, seg.depth}:
+        if d > seg.depth:
+            continue
+        i = seg.start
+        while i < seg.stop:
+            j = min(i + d, seg.stop)
+            spans.add((i, j))
+            i = j
+    if seg.depth > 1:
+        for i in range(seg.start, seg.stop):
+            for j in seg.spans_from(i, max_span):
+                spans.add((i, j))
+    return sorted(spans)
 
 
 def _uniform_candidates(seg: Segment, plan_ij) -> List[Candidate]:
@@ -778,11 +972,12 @@ def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
                           max_bursts: Optional[int] = None
                           ) -> List[SegmentPlan]:
     plan_ij = _segment_planner(g, hw, topology, df_fn, engine=engine)
+    max_span = min(seg.depth, hw.max_depth, DP_MAX_SPAN)
+    plan_ij.prime(_search_spans(seg, max_span))
     u_lat, u_dram, u_plans = _select(_uniform_candidates(seg, plan_ij),
                                      objective, constraints)
     if seg.depth == 1:
         return list(u_plans)
-    max_span = min(seg.depth, hw.max_depth, DP_MAX_SPAN)
     frontier = _dp_frontier(seg, plan_ij, max_span)
     # guard, re-expressed per objective: the DP result must dominate (or
     # match) the uniform enumeration's best *under the same objective and
@@ -791,7 +986,8 @@ def _best_subsegmentation(g: Graph, seg: Segment, hw: HWConfig,
     viable = [(l, d, p) for l, d, p in frontier
               if l <= u_lat and d <= u_dram]
     viable.append((u_lat, u_dram, u_plans))
-    regions = _region_plans(g, seg, hw, topology, df_fn) if branch else {}
+    regions = (_region_plans(g, seg, hw, topology, df_fn, engine=engine)
+               if branch else {})
     if not regions:
         if sim_check:
             _, _, chosen = _sim_rerank(viable, hw, topology, objective,
@@ -821,7 +1017,8 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
                    sim_check: bool = False,
                    objective: Objective = DEFAULT_OBJECTIVE,
                    constraints: Sequence[Constraint] = (),
-                   max_bursts: Optional[int] = None) -> PlanResult:
+                   max_bursts: Optional[int] = None,
+                   engine: str = "numpy") -> PlanResult:
     """Full PipeOrgan flow (Fig. 7) with the cut-point DP mapper.
 
     Stage 1's footprint heuristic gives the *maximum useful* depth per
@@ -849,11 +1046,18 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
     never-worse than the uniform enumeration and the linearized planner
     would be for that objective.  The default reproduces the historical
     latency-first rule bit for bit.
+
+    ``engine`` selects the candidate pricer: ``"numpy"`` (default — the
+    vectorized host engine, bit-stable against the goldens), ``"jax"``
+    (batched jit/vmap pricing, ~1e-9 relative agreement), or ``"auto"``
+    (jax when available).  See docs/engines.md.
     """
+    eng = resolve_engine(engine)
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plans.extend(_best_subsegmentation(g, s, hw, topology,
                                            _pipeorgan_df_fn,
+                                           engine=eng,
                                            sim_check=sim_check,
                                            branch=True,
                                            objective=objective,
@@ -867,7 +1071,8 @@ def plan_pipeorgan_linear(g: Graph, hw: HWConfig,
                           sim_check: bool = False,
                           objective: Objective = DEFAULT_OBJECTIVE,
                           constraints: Sequence[Constraint] = (),
-                          max_bursts: Optional[int] = None) -> PlanResult:
+                          max_bursts: Optional[int] = None,
+                          engine: str = "numpy") -> PlanResult:
     """The cut-point DP *without* branch-parallel candidates.
 
     This is exactly the pre-branch-aware planner: every series-parallel
@@ -876,10 +1081,12 @@ def plan_pipeorgan_linear(g: Graph, hw: HWConfig,
     per objective) and for the co-placed-vs-serialized differential
     sweeps.
     """
+    eng = resolve_engine(engine)
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
         plans.extend(_best_subsegmentation(g, s, hw, topology,
                                            _pipeorgan_df_fn,
+                                           engine=eng,
                                            sim_check=sim_check,
                                            objective=objective,
                                            constraints=constraints,
@@ -890,17 +1097,20 @@ def plan_pipeorgan_linear(g: Graph, hw: HWConfig,
 def plan_pipeorgan_uniform(g: Graph, hw: HWConfig,
                            topology: Topology = Topology.AMP,
                            objective: Objective = DEFAULT_OBJECTIVE,
-                           constraints: Sequence[Constraint] = ()
-                           ) -> PlanResult:
+                           constraints: Sequence[Constraint] = (),
+                           engine: str = "numpy") -> PlanResult:
     """The original uniform-depth enumeration on the vectorized engine.
 
     Same search space and selection rule as the seed planner; used by the
     equivalence tests as the baseline the DP must never lose to (selected
     under the same objective as the DP when one is given).
     """
+    eng = resolve_engine(engine)
     plans: List[SegmentPlan] = []
     for s in segment_graph(g, hw):
-        plan_ij = _segment_planner(g, hw, topology, _pipeorgan_df_fn)
+        plan_ij = _segment_planner(g, hw, topology, _pipeorgan_df_fn,
+                                   engine=eng)
+        plan_ij.prime(_search_spans(s, 0))
         _, _, chosen = _select(_uniform_candidates(s, plan_ij),
                                objective, constraints)
         plans.extend(chosen)
@@ -1035,11 +1245,13 @@ def plan_layer_by_layer(g: Graph, hw: HWConfig) -> PlanResult:
 # ---------------------------------------------------------------------------
 
 register_strategy("pipeorgan", plan_pipeorgan, Topology.AMP,
-                  supports_sim_check=True, supports_objective=True)
+                  supports_sim_check=True, supports_objective=True,
+                  supports_engine=True)
 register_strategy("pipeorgan-linear", plan_pipeorgan_linear, Topology.AMP,
-                  supports_sim_check=True, supports_objective=True)
+                  supports_sim_check=True, supports_objective=True,
+                  supports_engine=True)
 register_strategy("pipeorgan-uniform", plan_pipeorgan_uniform, Topology.AMP,
-                  supports_objective=True)
+                  supports_objective=True, supports_engine=True)
 register_strategy("tangram", plan_tangram_like, Topology.MESH)
 register_strategy("simba", plan_simba_like, Topology.MESH)
 register_strategy("layerbylayer", plan_layer_by_layer, Topology.MESH,
@@ -1049,6 +1261,19 @@ register_strategy("layerbylayer", plan_layer_by_layer, Topology.MESH,
 # (consumed by Planner.cache_info_all; plugins register alongside)
 register_cache("place", lambda: tuple(_cached_place.cache_info()))
 register_cache("pair_traffic", lambda: tuple(_pair_traffic.cache_info()))
+
+
+def _jax_price_cache_info() -> Tuple[int, int, Optional[int], int]:
+    """The jax engine's jitted-callable cache, read through ``sys.modules``
+    so merely *listing* caches never forces the jax import."""
+    mod = sys.modules.get((__package__ or "repro.core") +
+                          ".pipeline_model_jax")
+    if mod is None or not mod.is_available():
+        return (0, 0, None, 0)
+    return mod.price_cache_info()
+
+
+register_cache("jax_price", _jax_price_cache_info)
 
 
 class _StrategiesView(collections.abc.Mapping):

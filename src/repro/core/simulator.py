@@ -553,15 +553,35 @@ def _depth1_report(plan: SegmentPlan, hw: HWConfig, dram: float,
 
 
 def simulate_segment(plan: SegmentPlan, hw: HWConfig, topology: Topology,
-                     max_bursts: int = DEFAULT_MAX_BURSTS
-                     ) -> SegmentSimReport:
+                     max_bursts: int = DEFAULT_MAX_BURSTS,
+                     engine: str = "numpy") -> SegmentSimReport:
     """Execute one segment plan end-to-end on the max-plus lattice.
 
     Semantically identical to ``simulate_reference`` (the parity suite
     enforces it); every per-burst Python loop is replaced by a cumulative
     max/sum recurrence over the burst axis, and NoC transport by the
     cached ``_TransportProgram`` impulse-response convolution.
+
+    ``engine`` selects how the three max-plus scans (emission chain, GB
+    port server, drain absorb) execute: ``"numpy"`` (default) keeps the
+    in-line closed forms; ``"jax"`` routes them through
+    ``kernels.maxplus_scan`` (Pallas on TPU, ``lax.associative_scan``
+    elsewhere — see docs/engines.md); ``"reference"`` delegates to the
+    scalar ``simulate_reference`` loop.
     """
+    if engine == "reference":
+        return simulate_reference(plan, hw, topology, max_bursts)
+    if engine not in ("numpy", "jax"):
+        raise ValueError(f"unknown simulator engine {engine!r}; "
+                         "one of ('numpy', 'jax', 'reference')")
+    if engine == "jax":
+        from ..kernels.maxplus_scan import maxplus_scan
+
+        def _maxplus(u: np.ndarray, s: float, h0: float = -math.inf
+                     ) -> np.ndarray:
+            return maxplus_scan(u, np.full(u.shape[0], s), h0)
+    else:
+        _maxplus = None
     D = len(plan.ops)
     dram, mem_stall, edges, incoming, n_bursts, t_prod, t_cons, fill, \
         base_service, service = _segment_preamble(plan, hw)
@@ -603,7 +623,10 @@ def simulate_segment(plan: SegmentPlan, hw: HWConfig, topology: Topology,
         # ---- emits: t_b = max(t_{b-1}, ready_b) + service, a max-plus
         # scan whose closed form is a prefix cumulative max ----------------
         s = service[k]
-        emits = np.maximum.accumulate(ready - b * s) + (b + 1.0) * s
+        if _maxplus is not None:
+            emits = _maxplus(ready + s, s)
+        else:
+            emits = np.maximum.accumulate(ready - b * s) + (b + 1.0) * s
 
         if via_gb:
             prog = None
@@ -611,7 +634,11 @@ def simulate_segment(plan: SegmentPlan, hw: HWConfig, topology: Topology,
             peak, hop_words, loads = 0.0, 0.0, {}
             # GB port server: start_b = max(t_b, start_{b-1} + occ) — the
             # same scan shape; write + read = 2 port passes
-            starts = np.maximum.accumulate(emits - b * gb_occ) + b * gb_occ
+            if _maxplus is not None:
+                starts = _maxplus(emits, gb_occ)
+            else:
+                starts = (np.maximum.accumulate(emits - b * gb_occ)
+                          + b * gb_occ)
             arrivals = starts + 2.0 * gb_occ
         else:
             prog = _transport_program(plan, k, hw, topology)
@@ -660,10 +687,17 @@ def simulate_segment(plan: SegmentPlan, hw: HWConfig, topology: Topology,
         tc_last = max(t_cons[jl], 1e-12)
         sim_abs = min(n_last, max(2, max_bursts))
         init = tl.at(min(fill[jl], n_last) - 1)  # wait for the first chunk
-        bb = np.arange(sim_abs, dtype=np.float64)
-        done_f = max(init + sim_abs * tc_last,
-                     float(np.max(tl.times[:sim_abs]
-                                  + (sim_abs - bb) * tc_last)))
+        if _maxplus is not None:
+            # done_b = max(done_{b-1}, arr_b) + tc with done_{-1} = init:
+            # u = arr + tc, s = tc, h0 = init; the last element is the
+            # stream's absorb-finish time
+            done_f = float(_maxplus(tl.times[:sim_abs] + tc_last, tc_last,
+                                    h0=init)[-1])
+        else:
+            bb = np.arange(sim_abs, dtype=np.float64)
+            done_f = max(init + sim_abs * tc_last,
+                         float(np.max(tl.times[:sim_abs]
+                                      + (sim_abs - bb) * tc_last)))
         if n_last > sim_abs:
             done_f += (n_last - sim_abs) * max(tl.spacing, tc_last)
         done = max(done, done_f)

@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# maxplus_scan is the one exception wired into core: the simulator's
+# max-plus recurrence engine (core/simulator.py, engine="jax") runs on it.
+# The module guards its jax import, so this package stays importable on
+# jax-free installs (engine="numpy" keeps working).
+from .maxplus_scan import maxplus_scan, maxplus_scan_reference  # noqa: F401

@@ -159,6 +159,11 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig,
             k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache is not None:
+        # dynamic_update_slice wants every index in one dtype; under
+        # jax_enable_x64 the literal zeros would promote to int64 while
+        # cache_index stays int32, so pin them all to int32 explicitly.
+        cache_index = jnp.asarray(cache_index, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
         if cfg.kv_quant:
             # int8 cache with per-vector scales: quantize the new slice,
             # dequantize on read (fused on TPU; HBM moves 1B/elem not 2)
@@ -167,7 +172,7 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig,
             v_s = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-8
             k_q = jnp.round(k / k_s).astype(jnp.int8)
             v_q = jnp.round(v / v_s).astype(jnp.int8)
-            idx = (0, cache_index, 0, 0)
+            idx = (zero, cache_index, zero, zero)
             ck = jax.lax.dynamic_update_slice(ck, k_q, idx)
             cv = jax.lax.dynamic_update_slice(cv, v_q, idx)
             ks = jax.lax.dynamic_update_slice(ks, k_s.astype(ks.dtype), idx)
@@ -178,9 +183,9 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig,
         else:
             ck, cv = cache
             ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, cache_index, 0, 0))
+                                              (zero, cache_index, zero, zero))
             cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, cache_index, 0, 0))
+                                              (zero, cache_index, zero, zero))
             k, v = ck, cv
             new_cache = (ck, cv)
         T = k.shape[1]
