@@ -69,6 +69,11 @@ def _derived(name: str, rows) -> str:
             gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
             return (f"load_speedup_vs_replan={gm['load_speedup_vs_replan']};"
                     f"roundtrip_identical={gm['roundtrip_identical']}")
+        if name == "multi_tenant":
+            tot = [r for r in rows if r.get("scenario") == "ALL"][0]
+            return (f"guard_holds={tot['guard_holds']};"
+                    f"concurrent_win={tot['any_concurrent_win']};"
+                    f"validated={tot['validated']}")
         if name == "amp_ablation":
             amp = [r for r in rows if r["topology"] == "amp"
                    and r["strategy"] == "tangram-like"][0]

@@ -30,8 +30,9 @@ from .graph import (BranchRegion, Graph, Op, OpKind, SPBlock, add,
 from .hwconfig import HWConfig, PAPER_HW, TPU_V5E
 from .noc import (Flow, FlowBatch, Topology, TrafficStats, analyze,
                   analyze_reference, cached_flow_batch, flow_batch_cache_clear,
-                  flow_batch_cache_info, join_flow_batch, multicast_flow_batch,
-                  pair_flow_batch, segment_flows)
+                  flow_batch_cache_info, interference_channel_load,
+                  join_flow_batch, multicast_flow_batch, offset_flow_batch,
+                  pair_flow_batch, segment_flows, union_flow_batch)
 from .pipeline_model import SegmentCost, chain_edges, segment_cost
 from .plan_api import (Constraint, DEFAULT_OBJECTIVE, METRICS, Objective,
                        PlanAPIDeprecationWarning, PlanRequest, StrategySpec,
@@ -54,6 +55,12 @@ from .simulator import (DEFAULT_MAX_BURSTS, LATENCY_BAND,
                         simulate_segment, validate_plan)
 from .spatial import (Placement, SpatialOrg, allocate_pes, choose_spatial_org,
                       place, place_branches)
+from .multi_tenant import (MT_ARTIFACT_KIND, MT_SCHEMA_VERSION,
+                           MultiTenantArtifact, MultiTenantPlan,
+                           MultiTenantRequest, MultiTenantValidation,
+                           TenantPlan, TenantSpec, band_hw, band_splits,
+                           mtplan_from_dict, mtplan_to_dict,
+                           resolve_multi_tenant, validate_multi_tenant)
 
 __all__ = [
     "Dataflow", "choose_dataflow", "best_case_arithmetic_intensity",
@@ -65,8 +72,9 @@ __all__ = [
     "HWConfig", "PAPER_HW", "TPU_V5E",
     "Flow", "FlowBatch", "Topology", "TrafficStats", "analyze",
     "analyze_reference", "cached_flow_batch", "flow_batch_cache_clear",
-    "flow_batch_cache_info", "join_flow_batch", "multicast_flow_batch",
-    "pair_flow_batch", "segment_flows",
+    "flow_batch_cache_info", "interference_channel_load", "join_flow_batch",
+    "multicast_flow_batch", "offset_flow_batch", "pair_flow_batch",
+    "segment_flows", "union_flow_batch",
     "SegmentCost", "chain_edges", "segment_cost",
     "Constraint", "DEFAULT_OBJECTIVE", "METRICS", "Objective",
     "PlanAPIDeprecationWarning", "PlanRequest", "StrategySpec", "Term",
@@ -86,4 +94,9 @@ __all__ = [
     "simulate_reference", "simulate_segment", "validate_plan",
     "Placement", "SpatialOrg", "allocate_pes", "choose_spatial_org",
     "place", "place_branches",
+    "MT_ARTIFACT_KIND", "MT_SCHEMA_VERSION", "MultiTenantArtifact",
+    "MultiTenantPlan", "MultiTenantRequest", "MultiTenantValidation",
+    "TenantPlan", "TenantSpec", "band_hw", "band_splits",
+    "mtplan_from_dict", "mtplan_to_dict", "resolve_multi_tenant",
+    "validate_multi_tenant",
 ]

@@ -653,6 +653,88 @@ def join_flow_batch(placement: Placement, src_slots: Sequence[int],
         for s, w in zip(src_slots, words_each)])
 
 
+# ---------------------------------------------------------------------------
+# Cross-tenant flows (multi-tenant substrate partitions)
+# ---------------------------------------------------------------------------
+
+
+def offset_flow_batch(fb: FlowBatch, drow: int = 0, dcol: int = 0
+                      ) -> FlowBatch:
+    """Translate a flow set into another coordinate frame.
+
+    A tenant planned on a column band carries band-local placements; its
+    flows must be shifted by the band origin before they share a link
+    map with co-resident tenants on the full substrate.
+    """
+    if not len(fb) or (drow == 0 and dcol == 0):
+        return fb
+    shift = np.array([drow, dcol], np.int64)
+    return FlowBatch(fb.src + shift, fb.dst + shift, fb.words.copy())
+
+
+def union_flow_batch(batches: Sequence[FlowBatch]) -> FlowBatch:
+    """The union of several flow sets sharing one substrate.
+
+    The cross-tenant generalization of ``join_flow_batch``: concatenating
+    the batches in tenant order keeps link loads accumulated on one map
+    and the 4-ingress-port arbitration assigned in flow order across
+    every co-resident producer, exactly as the join case shares ports
+    across converging branch tails.
+    """
+    return FlowBatch.concat(list(batches))
+
+
+def interference_channel_load(own: FlowBatch,
+                              others: Sequence[FlowBatch],
+                              hw: HWConfig, topology: Topology
+                              ) -> Tuple[float, float]:
+    """Worst per-interval load over the links ``own`` traffic uses.
+
+    Returns ``(solo, shared)``: the hottest of own's links counting only
+    own flows, and counting every co-resident flow set accumulated onto
+    the same link-load map (``others`` walk first, matching
+    ``union_flow_batch`` order, so ingress-port arbitration is shared).
+    ``shared - solo`` is the interference price a co-resident tenant
+    pays on its hottest shared channel; it is exactly zero when the
+    tenants' routes are link-disjoint (e.g. column bands under
+    dimension-ordered routing with no overlapping columns).
+    """
+    if not len(own):
+        return 0.0, 0.0
+    rows, cols = hw.pe_rows, hw.pe_cols
+    express = hw.amp_link_len if topology == Topology.AMP else 1
+    load: Dict[object, float] = defaultdict(float)
+    ingress_port: Dict[Coord, int] = defaultdict(int)
+    own_keys: set = set()
+
+    def walk(fb: FlowBatch, mine: bool) -> None:
+        for s, d, w in zip(fb.src, fb.dst, fb.words):
+            src = (int(s[0]), int(s[1]))
+            dst = (int(d[0]), int(d[1]))
+            w = float(w)
+            if w <= 0 or src == dst:
+                continue
+            path = route(src, dst, rows, cols, topology, express)
+            for i, link in enumerate(path):
+                key: object = link
+                if i == len(path) - 1:
+                    port = ingress_port[dst] % 4
+                    ingress_port[dst] += 1
+                    key = (dst, "in", port)
+                load[key] += w
+                if mine:
+                    own_keys.add(key)
+
+    for fb in others:
+        walk(fb, mine=False)
+    shared_base = dict(load)
+    walk(own, mine=True)
+    shared = max((load[k] for k in own_keys), default=0.0)
+    solo = max((load[k] - shared_base.get(k, 0.0) for k in own_keys),
+               default=0.0)
+    return solo, shared
+
+
 def segment_flows(placement: Placement,
                   interval_words: Sequence[float],
                   skip_pairs: Iterable[Tuple[int, int, float]] = ()

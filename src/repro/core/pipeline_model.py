@@ -135,11 +135,18 @@ def segment_cost(
     skip_in_bytes: float = 0.0,
     array_pes: Optional[int] = None,
     edges: Optional[Sequence[Tuple[int, int]]] = None,
+    dram_bw_fraction: float = 1.0,
 ) -> SegmentCost:
     """Price one segment.  ``edges=None`` keeps the original linear-chain
     path bit-for-bit; an explicit edge list prices a branch-parallel slot
     DAG through ``_dag_segment_cost`` (same per-pair interval equations,
     generalized to fork multicasts, concurrent branches and join drains).
+
+    ``dram_bw_fraction`` is the share of the DRAM/GB bandwidth this
+    segment can actually use — 1.0 (the default, bit-identical) when the
+    graph owns the substrate, less when co-resident tenants contend for
+    the same memory interface (the multi-tenant planner prices their
+    steady-state demand here).
     """
     D = len(ops)
     assert len(pe_alloc) == D
@@ -149,11 +156,13 @@ def segment_cost(
         return _dag_segment_cost(ops, dataflows, grans, pe_alloc, hw,
                                  noc_stats, via_global_buffer,
                                  external_in_bytes, external_out_bytes,
-                                 skip_in_bytes, array_pes, tuple(edges))
+                                 skip_in_bytes, array_pes, tuple(edges),
+                                 dram_bw_fraction)
     ext_dram = external_in_bytes + external_out_bytes + skip_in_bytes
     w_traffic = weight_dram_traffic(ops, dataflows, hw, pe_alloc)
     dram = ext_dram + w_traffic
-    mem_stall = dram / hw.dram_bw_bytes_per_cycle
+    mem_stall = dram / (hw.dram_bw_bytes_per_cycle
+                        * min(1.0, max(dram_bw_fraction, 1e-6)))
 
     # ---- depth-1 (no pipelining) --------------------------------------------
     if D == 1:
@@ -258,6 +267,7 @@ def _dag_segment_cost(
     skip_in_bytes: float,
     array_pes: int,
     edges: Tuple[Tuple[int, int], ...],
+    dram_bw_fraction: float = 1.0,
 ) -> SegmentCost:
     """Fig. 3 interval equations over an explicit pipeline slot DAG.
 
@@ -283,7 +293,8 @@ def _dag_segment_cost(
     ext_dram = external_in_bytes + external_out_bytes + skip_in_bytes
     w_traffic = weight_dram_traffic(ops, dataflows, hw, pe_alloc)
     dram = ext_dram + w_traffic
-    mem_stall = dram / hw.dram_bw_bytes_per_cycle
+    mem_stall = dram / (hw.dram_bw_bytes_per_cycle
+                        * min(1.0, max(dram_bw_fraction, 1e-6)))
 
     sink = D - 1
     interior_bytes = sum(ops[u].output_volume() for u in range(D)

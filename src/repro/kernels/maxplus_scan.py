@@ -189,9 +189,14 @@ def maxplus_scan(u, s, h0: float = -math.inf, engine: str = "auto",
     if squeeze:
         u, s = u[None, :], s[None, :]
     B, T = u.shape
+    # resolve + validate the engine before the empty-input early return:
+    # a bogus engine name must raise even when there is nothing to scan
+    eng = _resolve_engine(engine)
+    if eng not in ("pallas", "xla", "numpy"):
+        raise ValueError(f"unknown maxplus engine {eng!r}; one of "
+                         "('auto', 'pallas', 'xla', 'numpy')")
     if T == 0:
         return np.zeros(0) if squeeze else np.zeros((B, 0))
-    eng = _resolve_engine(engine)
     if eng == "numpy":
         out = np.stack([_maxplus_numpy(u[b], s[b], h0) for b in range(B)])
         return out[0] if squeeze else out
@@ -199,7 +204,7 @@ def maxplus_scan(u, s, h0: float = -math.inf, engine: str = "auto",
     h = jnp.full((B, 1), h0, jnp.float64)
     if eng == "xla":
         out = np.asarray(_maxplus_xla(jnp.asarray(u), jnp.asarray(s), h))
-    elif eng == "pallas":
+    else:  # pallas (engine names validated above)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         # pad to the next power of two (sliced off below): bounds the
@@ -213,7 +218,4 @@ def maxplus_scan(u, s, h0: float = -math.inf, engine: str = "auto",
             jnp.asarray(u), jnp.asarray(s), h,
             chunk=min(_CHUNK, T2),
             interpret=bool(interpret)))[:, :T]
-    else:
-        raise ValueError(f"unknown maxplus engine {eng!r}; one of "
-                         "('auto', 'pallas', 'xla', 'numpy')")
     return out[0] if squeeze else out

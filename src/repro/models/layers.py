@@ -142,7 +142,10 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig,
 
     window: traced scalar; attend only to keys within `window` positions
     (<=0 or None means unbounded).  cache: (k, v) of shape
-    (B, T_max, Hkv, hd); cache_index: first free slot (scalar int32).
+    (B, T_max, Hkv, hd); cache_index: first free slot — a scalar int32
+    when every batch row fills in lockstep, or a per-row (B,) int32
+    vector when rows advance independently (continuous batching: each
+    decode slot carries its own cursor).
     """
     B, S, _ = x.shape
     if positions.ndim == 1:
@@ -164,6 +167,18 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig,
         # cache_index stays int32, so pin them all to int32 explicitly.
         cache_index = jnp.asarray(cache_index, jnp.int32)
         zero = jnp.zeros((), jnp.int32)
+        per_slot = cache_index.ndim == 1
+        if per_slot:
+            # each batch row writes at its own cursor (vmapped update);
+            # the scalar path below broadcasts one write over all rows
+            def place(c, new):
+                return jax.vmap(
+                    lambda cb, nb, i: jax.lax.dynamic_update_slice(
+                        cb, nb, (i, zero, zero)))(c, new, cache_index)
+        else:
+            def place(c, new):
+                return jax.lax.dynamic_update_slice(
+                    c, new, (zero, cache_index, zero, zero))
         if cfg.kv_quant:
             # int8 cache with per-vector scales: quantize the new slice,
             # dequantize on read (fused on TPU; HBM moves 1B/elem not 2)
@@ -172,27 +187,25 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig,
             v_s = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0 + 1e-8
             k_q = jnp.round(k / k_s).astype(jnp.int8)
             v_q = jnp.round(v / v_s).astype(jnp.int8)
-            idx = (zero, cache_index, zero, zero)
-            ck = jax.lax.dynamic_update_slice(ck, k_q, idx)
-            cv = jax.lax.dynamic_update_slice(cv, v_q, idx)
-            ks = jax.lax.dynamic_update_slice(ks, k_s.astype(ks.dtype), idx)
-            vs = jax.lax.dynamic_update_slice(vs, v_s.astype(vs.dtype), idx)
+            ck = place(ck, k_q)
+            cv = place(cv, v_q)
+            ks = place(ks, k_s.astype(ks.dtype))
+            vs = place(vs, v_s.astype(vs.dtype))
             k = ck.astype(x.dtype) * ks.astype(x.dtype)
             v = cv.astype(x.dtype) * vs.astype(x.dtype)
             new_cache = (ck, cv, ks, vs)
         else:
             ck, cv = cache
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (zero, cache_index, zero, zero))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (zero, cache_index, zero, zero))
+            ck = place(ck, k.astype(ck.dtype))
+            cv = place(cv, v.astype(cv.dtype))
             k, v = ck, cv
             new_cache = (ck, cv)
         T = k.shape[1]
         kpos = jnp.arange(T)[None, None, :]                # (1,1,T)
         qpos = positions[:, :, None]                       # (B,S,1)
         mask = kpos <= qpos                                # causal vs cache
-        mask = mask & (kpos < (cache_index + S))
+        fill = cache_index[:, None, None] if per_slot else cache_index
+        mask = mask & (kpos < (fill + S))
         if window is not None:
             mask = mask & (qpos - kpos < window)
     else:

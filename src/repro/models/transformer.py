@@ -317,13 +317,38 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def zero_cache_slot(cfg: ModelConfig, cache: Params, slot: int) -> Params:
+    """Clear one batch slot's rows across every array of a decode cache.
+
+    Continuous-batching engines reuse decode slots; a refilled request
+    must not attend to the previous occupant's keys/values (or carry its
+    recurrent state), so its slot is wiped before prefill starts.  Works
+    on any layout ``init_cache`` builds: the hybrid family stacks caches
+    per layer with batch leading, every other family stacks layers first.
+    """
+    axis = 0 if cfg.arch_kind == "hybrid" else 1
+
+    def clear(a):
+        idx = [slice(None)] * a.ndim
+        idx[axis] = slot
+        return a.at[tuple(idx)].set(0)
+
+    return jax.tree.map(clear, cache)
+
+
 def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Params, index: jax.Array
                 ) -> Tuple[jax.Array, Params]:
-    """One decode step.  tokens: (B, 1); index: scalar int32 (cache fill)."""
+    """One decode step.  tokens: (B, 1); index: the cache fill cursor —
+    scalar int32 when all rows decode in lockstep, or per-slot (B,) int32
+    when a continuous-batching engine advances each slot independently."""
     B = tokens.shape[0]
     x = params["embed"][tokens]
-    positions = jnp.broadcast_to(index, (B, 1)).astype(jnp.int32)
+    index = jnp.asarray(index, jnp.int32)
+    if index.ndim == 1:
+        positions = index[:, None]
+    else:
+        positions = jnp.broadcast_to(index, (B, 1)).astype(jnp.int32)
     windows = layer_windows(cfg)
 
     if cfg.arch_kind == "hybrid":

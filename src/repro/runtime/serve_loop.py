@@ -25,7 +25,7 @@ from repro.core import (Graph, HWConfig, PlanAPIDeprecationWarning,
                         PlanRequest, PlanSchemaError, PlanStore, Topology,
                         gemm, get_planner)
 from repro.models.common import ModelConfig
-from repro.models.transformer import decode_step, init_cache
+from repro.models.transformer import decode_step, init_cache, zero_cache_slot
 
 
 def decode_graph(cfg: ModelConfig) -> Graph:
@@ -85,8 +85,12 @@ class ServeEngine:
         self.pos = np.zeros(batch_slots, np.int32)        # next cache index
         self.remaining_prompt: List[List[int]] = [[] for _ in range(batch_slots)]
         self.generated = np.zeros(batch_slots, np.int32)
+        # slots that have ever held a request: their cache rows must be
+        # wiped before reuse so the next occupant can't attend to them
+        self._slot_dirty = np.zeros(batch_slots, bool)
         self._step = jax.jit(self._device_step)
         self.ticks = 0
+        self.truncated = False
         # optional accelerator plan for this model's decode step.  The
         # resolution order is the offline-plan -> online-serve path:
         #   1. a ``plan_store`` artifact matching ``plan_request`` exactly
@@ -137,6 +141,9 @@ class ServeEngine:
         for slot in range(self.B):
             if self.active[slot] is None and self.queue:
                 req = self.queue.popleft()
+                if self._slot_dirty[slot]:
+                    self.cache = zero_cache_slot(self.cfg, self.cache, slot)
+                self._slot_dirty[slot] = True
                 self.active[slot] = req
                 self.remaining_prompt[slot] = list(req.prompt)
                 self.pos[slot] = 0
@@ -159,13 +166,15 @@ class ServeEngine:
             elif req.output:
                 feed[slot, 0] = req.output[-1]
             else:
-                feed[slot, 0] = req.prompt[-1]
+                # empty prompt: nothing to condition on — feed token 0
+                # (BOS convention) so generation starts from position 0
+                feed[slot, 0] = req.prompt[-1] if req.prompt else 0
 
-        # NOTE: slots share one scalar index in this simple engine, so a new
-        # request entering a drained pool restarts from its slot's cursor;
-        # per-slot positions are tracked host-side and the causal mask uses
-        # the max cursor (safe: extra cache rows are zero-masked by index).
-        index = jnp.int32(int(self.pos.max()))
+        # each slot decodes at its own cursor: the per-slot index vector
+        # keeps a refilled slot's writes and causal mask at *its* fill
+        # level, not the pool-wide maximum (which would let a fresh
+        # request attend to the previous occupant's cache rows)
+        index = jnp.asarray(self.pos, jnp.int32)
         nxt, self.cache = self._step(self.params, self.cache,
                                      jnp.asarray(feed), index)
         nxt = np.asarray(nxt)
@@ -191,9 +200,18 @@ class ServeEngine:
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         done: List[Request] = []
         ticks = 0
+        self.truncated = False
         while (self.queue or any(self.active)) and ticks < max_ticks:
             done.extend(self.step())
             ticks += 1
+        if self.queue or any(r is not None for r in self.active):
+            self.truncated = True
+            warnings.warn(
+                f"ServeEngine.run() stopped at max_ticks={max_ticks} with "
+                f"{len(self.queue)} queued and "
+                f"{sum(r is not None for r in self.active)} active "
+                "requests unfinished; results are truncated "
+                '(see stats()["truncated"])', RuntimeWarning, stacklevel=2)
         return done
 
     def stats(self) -> Dict[str, float]:
@@ -202,10 +220,164 @@ class ServeEngine:
             "ticks": float(self.ticks),
             "queued": float(len(self.queue)),
             "active": float(sum(r is not None for r in self.active)),
+            "truncated": float(self.truncated),
         }
         if self.plan is not None:
             cyc = self.plan.latency_cycles
             out["planned_cycles_per_token"] = cyc
             out["planned_dram_bytes_per_token"] = self.plan.dram_bytes
             out["planned_cycles_total"] = cyc * self.ticks
+        return out
+
+
+@dataclasses.dataclass
+class Lane:
+    """One tenant's serving lane: its engine plus scheduling weights.
+
+    ``share`` weights the time-multiplexed round-robin; ``priority``
+    orders admission (higher first).  ``deficit`` is the weighted
+    round-robin credit counter (internal).
+    """
+    name: str
+    engine: ServeEngine
+    share: float = 1.0
+    priority: int = 0
+    deficit: float = dataclasses.field(default=0.0, compare=False)
+
+    def __post_init__(self) -> None:
+        if self.share <= 0:
+            raise ValueError("lane share must be > 0")
+
+
+class AdmissionScheduler:
+    """Maps bursty request streams onto tenant lanes over one substrate.
+
+    The execution-side counterpart of ``core.multi_tenant``: a resolved
+    ``MultiTenantPlan`` says *how* the tenants share the array, and this
+    scheduler drives their ``ServeEngine``s accordingly —
+
+      * ``"spatial"`` — tenants sit on disjoint column bands, so every
+        lane with work ticks each round (true concurrency);
+      * ``"time"`` — one lane ticks per round, chosen by share-weighted
+        deficit round-robin (each round every backlogged lane earns
+        ``share`` credit; the largest credit runs and pays the total
+        active share), so long-term tick rates converge to the shares;
+      * ``"serialized"`` — strict priority order, shortest queue first
+        within a priority level; a lane runs until it drains.
+
+    Requests enter per-lane *pending* queues (``submit``) and are
+    admitted into an engine only when it has a free decode slot — the
+    engine-side queue never grows beyond the slot pool, so a burst on
+    one tenant cannot occupy another tenant's admission window.
+    """
+
+    MODES = ("spatial", "time", "serialized")
+
+    def __init__(self, lanes: List[Lane], mode: str = "spatial"):
+        if mode not in self.MODES:
+            raise ValueError(f"unknown mode {mode!r}; one of {self.MODES}")
+        names = [l.name for l in lanes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"lane names must be unique: {names}")
+        self.lanes: Dict[str, Lane] = {l.name: l for l in lanes}
+        self.mode = mode
+        self.pending: Dict[str, Deque[Request]] = {n: deque() for n in names}
+        self.done: Dict[str, List[Request]] = {n: [] for n in names}
+        self.finish_tick: Dict[int, int] = {}      # rid -> scheduler tick
+        self.ticks = 0
+        self.truncated = False
+
+    @classmethod
+    def from_plan(cls, plan, engines: Dict[str, ServeEngine]
+                  ) -> "AdmissionScheduler":
+        """Build the scheduler a resolved ``MultiTenantPlan`` prescribes:
+        one lane per tenant (its share/priority) in the plan's mode."""
+        lanes = [Lane(t.name, engines[t.name], t.share, t.priority)
+                 for t in plan.tenants]
+        return cls(lanes, mode=plan.mode)
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, lane: str, req: Request) -> None:
+        self.pending[lane].append(req)
+
+    def _admit(self) -> None:
+        """Admit pending requests into engines with free decode slots, in
+        lane priority order (higher first) so a high-priority tenant's
+        burst is never starved by a lower-priority backlog."""
+        for lane in sorted(self.lanes.values(),
+                           key=lambda l: (-l.priority, l.name)):
+            pend = self.pending[lane.name]
+            eng = lane.engine
+            free = (sum(r is None for r in eng.active) - len(eng.queue))
+            while pend and free > 0:
+                eng.submit(pend.popleft())
+                free -= 1
+
+    # -- scheduling ----------------------------------------------------------
+    def _backlogged(self) -> List[Lane]:
+        return [l for l in self.lanes.values()
+                if self.pending[l.name] or l.engine.queue
+                or any(r is not None for r in l.engine.active)]
+
+    def _pick_time_sliced(self, ready: List[Lane]) -> Lane:
+        for l in ready:
+            l.deficit += l.share
+        pick = max(ready, key=lambda l: (l.deficit, l.share, l.name))
+        pick.deficit -= sum(l.share for l in ready)
+        return pick
+
+    def _pick_serialized(self, ready: List[Lane]) -> Lane:
+        return min(ready, key=lambda l: (-l.priority, l.name))
+
+    def step(self) -> List[Request]:
+        """One scheduler round; returns requests completed this round."""
+        self._admit()
+        self.ticks += 1
+        ready = self._backlogged()
+        if not ready:
+            return []
+        if self.mode == "spatial":
+            running = ready
+        elif self.mode == "time":
+            running = [self._pick_time_sliced(ready)]
+        else:
+            running = [self._pick_serialized(ready)]
+        finished: List[Request] = []
+        for lane in running:
+            for req in lane.engine.step():
+                self.done[lane.name].append(req)
+                self.finish_tick[req.rid] = self.ticks
+                finished.append(req)
+        return finished
+
+    def run(self, max_ticks: int = 100_000) -> Dict[str, List[Request]]:
+        self.truncated = False
+        ticks = 0
+        while self._backlogged() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        left = self._backlogged()
+        if left:
+            self.truncated = True
+            warnings.warn(
+                f"AdmissionScheduler.run() stopped at max_ticks="
+                f"{max_ticks} with lanes {[l.name for l in left]} still "
+                "backlogged; results are truncated "
+                '(see stats()["truncated"])', RuntimeWarning, stacklevel=2)
+        return self.done
+
+    def stats(self) -> Dict[str, float]:
+        out: Dict[str, float] = {
+            "ticks": float(self.ticks),
+            "truncated": float(self.truncated),
+            "completed": float(sum(len(v) for v in self.done.values())),
+        }
+        for name, lane in sorted(self.lanes.items()):
+            done = self.done[name]
+            out[f"{name}.completed"] = float(len(done))
+            out[f"{name}.pending"] = float(len(self.pending[name]))
+            out[f"{name}.engine_ticks"] = float(lane.engine.ticks)
+            if done:
+                out[f"{name}.mean_finish_tick"] = float(
+                    np.mean([self.finish_tick[r.rid] for r in done]))
         return out

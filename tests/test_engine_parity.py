@@ -311,3 +311,19 @@ def test_engines_select_same_plan():
         assert pj.dram_bytes == pn.dram_bytes
 
     prop()
+
+
+def test_maxplus_engine_validated_before_empty_early_return():
+    """An invalid engine name must raise even when T == 0 — the empty
+    early return used to bypass engine resolution entirely."""
+    from repro.kernels.maxplus_scan import maxplus_scan
+
+    with pytest.raises(ValueError, match="unknown maxplus engine"):
+        maxplus_scan(np.zeros((2, 0)), np.zeros((2, 0)), engine="bogus")
+    with pytest.raises(ValueError, match="unknown maxplus engine"):
+        maxplus_scan(np.zeros(0), np.zeros(0), engine="bogus")
+    # valid engines still take the early return with the right shape
+    out = maxplus_scan(np.zeros((3, 0)), np.zeros((3, 0)), engine="numpy")
+    assert out.shape == (3, 0)
+    assert maxplus_scan(np.zeros(0), np.zeros(0), engine="numpy").shape \
+        == (0,)

@@ -45,6 +45,7 @@ def test_smoke_forward(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)
@@ -84,6 +85,7 @@ def test_smoke_serve_step(arch):
     assert (np.asarray(toks) < cfg.vocab).all()      # pad vocab masked
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma3-4b",
                                   "recurrentgemma-2b", "rwkv6-1.6b"])
 def test_decode_matches_prefill(arch):

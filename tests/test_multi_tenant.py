@@ -1,0 +1,317 @@
+"""Multi-tenant substrate planning: partitions, interference, guard,
+artifact round trip, and the simulator differential check."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (FlowBatch, MultiTenantRequest, PAPER_HW, PlanRequest,
+                        PlanStore, TenantSpec, Topology, band_hw, band_splits,
+                        get_planner, interference_channel_load,
+                        mtplan_from_dict, mtplan_to_dict, offset_flow_batch,
+                        plan_diffs, resolve_multi_tenant, union_flow_batch,
+                        validate_multi_tenant)
+from repro.core.graph import chain, gemm
+from repro.core.multi_tenant import (_fluid_completions, repriced_cost,
+                                     segment_flow_batches)
+
+
+def _tiny(name, m=64, nk=256, depth=4):
+    return chain(name, [gemm(f"g{i}", m, nk, nk) for i in range(depth)])
+
+
+def _spec(g, share=1.0, priority=0, name=None):
+    return TenantSpec(PlanRequest(g, hw=PAPER_HW, topology=Topology.AMP),
+                      share=share, priority=priority, name=name)
+
+
+def _two_small():
+    return MultiTenantRequest((_spec(_tiny("svc-a")), _spec(_tiny("svc-b"))))
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match=">= 2 tenants"):
+        MultiTenantRequest((_spec(_tiny("solo")),))
+    with pytest.raises(ValueError, match="unique"):
+        MultiTenantRequest((_spec(_tiny("a"), name="x"),
+                            _spec(_tiny("b"), name="x")))
+    with pytest.raises(ValueError, match="share"):
+        _spec(_tiny("a"), share=0.0)
+    other_hw = dataclasses.replace(PAPER_HW, pe_rows=16)
+    with pytest.raises(ValueError, match="HWConfig"):
+        MultiTenantRequest((
+            _spec(_tiny("a")),
+            TenantSpec(PlanRequest(_tiny("b"), hw=other_hw,
+                                   topology=Topology.AMP))))
+
+
+def test_request_identity_and_token():
+    a, b = _two_small(), _two_small()
+    assert a == b and hash(a) == hash(b)
+    assert a.cache_token() == b.cache_token()
+    c = MultiTenantRequest((_spec(_tiny("svc-a"), share=2.0),
+                            _spec(_tiny("svc-b"))))
+    assert a != c and a.cache_token() != c.cache_token()
+
+
+def test_tenant_name_defaults_to_graph_name():
+    s = _spec(_tiny("svc-a"))
+    assert s.name == "svc-a"
+
+
+# ---------------------------------------------------------------------------
+# band substrates and splits
+# ---------------------------------------------------------------------------
+
+
+def test_band_hw_scales_columns_and_gb():
+    b = band_hw(PAPER_HW, 16)
+    assert b.pe_cols == 16 and b.pe_rows == PAPER_HW.pe_rows
+    assert b.sram_bytes == PAPER_HW.sram_bytes // 2
+    assert b.dram_bw_bytes_per_cycle == PAPER_HW.dram_bw_bytes_per_cycle
+    assert band_hw(PAPER_HW, PAPER_HW.pe_cols) is PAPER_HW
+    with pytest.raises(ValueError):
+        band_hw(PAPER_HW, 0)
+
+
+def test_band_splits_cover_and_respect_minimum():
+    req = _two_small()
+    for split in band_splits(req, [1.0, 3.0]):
+        assert sum(split) == PAPER_HW.pe_cols
+        assert min(split) >= req.min_band_cols
+    # impossible minimum -> no spatial candidates
+    narrow = MultiTenantRequest(req.tenants, min_band_cols=20)
+    assert band_splits(narrow, [1.0, 1.0]) == []
+
+
+# ---------------------------------------------------------------------------
+# interference pricing
+# ---------------------------------------------------------------------------
+
+
+def test_repriced_cost_identity():
+    """Defaults (full bandwidth, no interference) must reproduce the
+    planner's own cost bit for bit — the pricing hook is exact."""
+    plan = get_planner().plan(
+        PlanRequest(_tiny("id-check"), hw=PAPER_HW, topology=Topology.AMP))
+    for seg in plan.segments:
+        c = repriced_cost(seg, PAPER_HW, Topology.AMP)
+        assert c.latency_cycles == seg.cost.latency_cycles
+        assert c.dram_bytes == seg.cost.dram_bytes
+        assert c.total_energy == seg.cost.total_energy
+
+
+def test_repriced_cost_contention_slows_latency_not_bytes():
+    plan = get_planner().plan(
+        PlanRequest(_tiny("frac-check"), hw=PAPER_HW, topology=Topology.AMP))
+    seg = plan.segments[0]
+    half = repriced_cost(seg, PAPER_HW, Topology.AMP, dram_bw_fraction=0.5)
+    assert half.latency_cycles >= seg.cost.latency_cycles
+    assert half.dram_bytes == seg.cost.dram_bytes
+
+
+def test_offset_and_union_flow_batch():
+    fb = FlowBatch(np.array([[0, 0], [1, 2]], np.int64),
+                   np.array([[0, 3], [2, 2]], np.int64),
+                   np.array([4.0, 2.0]))
+    moved = offset_flow_batch(fb, 0, 16)
+    assert moved.src[0].tolist() == [0, 16]
+    assert moved.dst[1].tolist() == [2, 18]
+    assert moved.words.tolist() == fb.words.tolist()
+    assert offset_flow_batch(fb, 0, 0) is fb
+    u = union_flow_batch([fb, moved])
+    assert len(u) == 4
+
+
+def test_interference_zero_for_link_disjoint_bands():
+    """Two column bands under dimension-ordered X-then-Y routing never
+    share a link, so cross-tenant interference prices to zero — the
+    property that makes spatial partitioning attractive."""
+    left = FlowBatch(np.array([[0, 0], [3, 5]], np.int64),
+                     np.array([[2, 10], [7, 12]], np.int64),
+                     np.array([8.0, 4.0]))
+    right = offset_flow_batch(left, 0, 16)
+    solo, shared = interference_channel_load(left, [right], PAPER_HW,
+                                             Topology.MESH)
+    assert shared == solo > 0.0
+
+
+def test_interference_positive_for_overlapping_flows():
+    a = FlowBatch(np.array([[0, 0]], np.int64),
+                  np.array([[0, 8]], np.int64), np.array([5.0]))
+    b = FlowBatch(np.array([[0, 2]], np.int64),
+                  np.array([[0, 10]], np.int64), np.array([3.0]))
+    solo, shared = interference_channel_load(a, [b], PAPER_HW,
+                                             Topology.MESH)
+    assert solo == 5.0
+    assert shared == 8.0          # both ride the row-0 links
+
+
+def test_fluid_completions_work_conserving():
+    lat = [100.0, 300.0, 50.0]
+    shares = [1.0, 2.0, 1.0]
+    done = _fluid_completions(lat, shares)
+    assert max(done) == pytest.approx(sum(lat))
+    assert all(d >= l for d, l in zip(done, lat))
+    # equal shares, equal work -> identical completions
+    same = _fluid_completions([10.0, 10.0], [1.0, 1.0])
+    assert same[0] == pytest.approx(same[1]) == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# resolution and the double guard
+# ---------------------------------------------------------------------------
+
+
+def test_small_tenants_win_spatially_with_priced_contention():
+    """Two small services fit their band's GB slice: spatial partitioning
+    beats serialization on makespan at equal DRAM, with the contended
+    DRAM bandwidth share priced into each tenant's latency."""
+    plan = resolve_multi_tenant(_two_small())
+    assert plan.mode == "spatial"
+    assert plan.makespan_cycles < plan.serialized_cycles
+    assert plan.dram_bytes <= plan.serialized_dram
+    for t in plan.tenants:
+        assert t.band is not None
+        assert t.dram_bw_fraction < 1.0          # contention priced
+        assert t.link_interference == 0.0        # bands are link-disjoint
+        # contention makes the tenant slower than its solo band plan
+        assert t.latency_cycles > t.plan.latency_cycles
+
+
+def test_double_guard_never_worse_than_serialized():
+    for req in (_two_small(),
+                MultiTenantRequest((_spec(_tiny("big", m=128, nk=512),
+                                          priority=1),
+                                    _spec(_tiny("small", m=32, nk=128))))):
+        plan = resolve_multi_tenant(req)
+        assert plan.makespan_cycles <= plan.serialized_cycles
+        assert plan.dram_bytes <= plan.serialized_dram
+        labels = [c[0] for c in plan.candidates]
+        assert "serialized" in labels and "time-sliced" in labels
+
+
+def test_serialized_order_respects_priority():
+    req = MultiTenantRequest((
+        _spec(_tiny("slow", m=128, nk=512), priority=1),   # big, priority
+        _spec(_tiny("fast", m=32, nk=128))),
+        min_band_cols=32)             # forbid spatial: only serial/time
+    plan = resolve_multi_tenant(req)
+    by_name = {t.name: t for t in plan.tenants}
+    if plan.mode == "serialized":
+        # priority tenant completes first despite being the longer job
+        assert by_name["slow"].completion_cycles \
+            < by_name["fast"].completion_cycles
+
+
+def test_time_slicing_wins_completion_under_priority_inversion():
+    """When priority forces the long job first, the serialized schedule
+    starves the short tenant; time slicing recovers its completion time
+    without hurting makespan or DRAM — the tie-break the fluid model
+    exists to win."""
+    req = MultiTenantRequest((
+        _spec(_tiny("long", m=128, nk=512), share=1.0, priority=1),
+        _spec(_tiny("short", m=32, nk=128), share=2.0)),
+        min_band_cols=32)
+    plan = resolve_multi_tenant(req)
+    serial = next(c for c in plan.candidates if c[0] == "serialized")
+    assert plan.makespan_cycles == pytest.approx(serial[1])
+    assert plan.dram_bytes == pytest.approx(serial[2])
+    if plan.mode == "time":
+        assert plan.weighted_completion_cycles < serial[3]
+
+
+def test_resolution_is_deterministic():
+    a = resolve_multi_tenant(_two_small())
+    b = resolve_multi_tenant(_two_small())
+    assert not plan_diffs(a, b)
+
+
+# ---------------------------------------------------------------------------
+# artifact round trip + warm store
+# ---------------------------------------------------------------------------
+
+
+def test_mtplan_dict_round_trip_lossless():
+    plan = resolve_multi_tenant(_two_small())
+    again = mtplan_from_dict(mtplan_to_dict(plan))
+    assert plan_diffs(plan, again) == []
+
+
+def test_store_round_trip_and_warm_boot(tmp_path):
+    store = PlanStore(tmp_path)
+    req = _two_small()
+    plan = resolve_multi_tenant(req, store=store)
+    assert getattr(plan, "source") == "planner"
+    assert list(tmp_path.glob("*.mtplan.json"))
+
+    class _Exploding:
+        def plan(self, request):      # pragma: no cover - must not run
+            raise AssertionError("warm store must not invoke the planner")
+
+    warm = resolve_multi_tenant(req, planner=_Exploding(), store=store)
+    assert getattr(warm, "source") == "store"
+    assert plan_diffs(plan, warm) == []
+
+
+def test_store_misses_on_different_request(tmp_path):
+    store = PlanStore(tmp_path)
+    resolve_multi_tenant(_two_small(), store=store)
+    other = MultiTenantRequest((_spec(_tiny("svc-a"), share=3.0),
+                                _spec(_tiny("svc-b"))))
+    plan = resolve_multi_tenant(other, store=store)
+    assert getattr(plan, "source") == "planner"
+
+
+def test_stale_schema_artifact_rejected(tmp_path):
+    import json
+
+    from repro.core import PlanSchemaError
+    from repro.core.multi_tenant import store_path
+
+    store = PlanStore(tmp_path)
+    req = _two_small()
+    resolve_multi_tenant(req, store=store)
+    path = store_path(store, req)
+    doc = json.loads(path.read_text())
+    doc["schema_version"] = 999
+    path.write_text(json.dumps(doc))
+    with pytest.raises(PlanSchemaError, match="schema"):
+        resolve_multi_tenant(req, store=store)
+
+
+# ---------------------------------------------------------------------------
+# differential validation
+# ---------------------------------------------------------------------------
+
+
+def test_validate_multi_tenant_runs_every_tenant_dag():
+    req = _two_small()
+    plan = resolve_multi_tenant(req)
+    report = validate_multi_tenant(req, plan, max_bursts=32)
+    assert set(report.tenants) == {"svc-a", "svc-b"}
+    assert report.ok, {n: r.summary() for n, r in report.tenants.items()}
+    assert report.simulated_makespan > 0
+    # spatial tenants run concurrently: the simulated makespan is the
+    # max of the per-tenant simulations, not their sum
+    if plan.mode == "spatial":
+        sims = [sum(s.simulated_latency for s in r.segments)
+                for r in report.tenants.values()]
+        assert report.simulated_makespan == pytest.approx(max(sims))
+
+
+def test_segment_flow_batches_match_planner_pricing():
+    plan = get_planner().plan(
+        PlanRequest(_tiny("fb-check"), hw=PAPER_HW, topology=Topology.AMP))
+    for seg in plan.segments:
+        fbs = segment_flow_batches(seg)
+        if seg.placement is None or seg.placement.via_global_buffer:
+            assert fbs == []
+        else:
+            assert len(fbs) == len(seg.pipeline_edges)
+            assert all(isinstance(fb, FlowBatch) for fb in fbs)

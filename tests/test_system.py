@@ -20,6 +20,7 @@ from repro.runtime.train_loop import FaultInjector, TrainLoopConfig, train
 # training loop + fault tolerance
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_train_decreases_loss_and_survives_failure():
     cfg = get_config("qwen2.5-3b", smoke=True)
     data = DataConfig(seq_len=64, global_batch=8, vocab=cfg.vocab)
@@ -34,6 +35,7 @@ def test_train_decreases_loss_and_survives_failure():
         assert h[-1]["loss"] < h[0]["loss"] * 0.85
 
 
+@pytest.mark.slow
 def test_train_resume_is_seamless():
     """Stopping at step k and restarting produces the same state as a
     straight run (deterministic data + checkpointed opt state)."""
