@@ -1,0 +1,73 @@
+"""Cold-plan perf regression check for CI's perf-smoke job.
+
+Compares a fresh ``planner_speed`` run against the committed baseline
+``summary.json``: the geometric mean over per-task cold-DP wall-clock
+ratios (fresh ``dp_s`` / baseline ``dp_s``) must not regress by more than
+``--max-regression`` (default 20%).  Geomean — not TOTAL — so one big
+task cannot mask a 10x regression on a small one, and shared-runner
+noise on any single task is damped.
+
+  python -m benchmarks.check_regression BASELINE.json FRESH.json \\
+      [--max-regression 0.20]
+
+Exit codes: 0 ok, 1 regression past the threshold, 2 unusable inputs
+(missing files/rows).  The CI step stays non-blocking (the job is
+``continue-on-error``); the exit code makes the red X visible without
+gating merges on shared-runner wall-clock.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def _dp_times(summary_path: Path) -> dict:
+    data = json.loads(summary_path.read_text())
+    rows = data.get("planner_speed", [])
+    return {r["task"]: float(r["dp_s"]) for r in rows
+            if r.get("task") not in (None, "TOTAL", "STAGE1")
+            and "dp_s" in r and float(r.get("dp_s", 0)) > 0}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("fresh", type=Path)
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="allowed geomean slowdown (0.20 = 20%%)")
+    args = ap.parse_args()
+
+    try:
+        base = _dp_times(args.baseline)
+        fresh = _dp_times(args.fresh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: unusable input: {e}", file=sys.stderr)
+        return 2
+    common = sorted(set(base) & set(fresh))
+    if not common:
+        print("check_regression: no common planner_speed tasks",
+              file=sys.stderr)
+        return 2
+
+    logs = []
+    for task in common:
+        ratio = fresh[task] / base[task]
+        logs.append(math.log(ratio))
+        print(f"{task:24s} baseline {base[task]:8.4f}s  "
+              f"fresh {fresh[task]:8.4f}s  ratio {ratio:5.2f}x")
+    gm = math.exp(sum(logs) / len(logs))
+    limit = 1.0 + args.max_regression
+    print(f"geomean dp_s ratio: {gm:.3f}x (limit {limit:.2f}x, "
+          f"{len(common)} tasks)")
+    if gm > limit:
+        print(f"check_regression: cold-plan DP regressed {gm:.2f}x > "
+              f"{limit:.2f}x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

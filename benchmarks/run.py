@@ -53,6 +53,11 @@ def _derived(name: str, rows) -> str:
         if name == "planner_speed":
             tot = [r for r in rows if r.get("task") == "TOTAL"][0]
             return f"dp_speedup_vs_reference={tot['speedup']}"
+        if name == "plan_profile":
+            tot = [r for r in rows if r.get("task") == "TOTAL"][0]
+            return (f"noc_pct={tot['noc_pct']};"
+                    f"pricing_pct={tot['pricing_pct']};"
+                    f"dp_overhead_pct={tot['dp_overhead_pct']}")
         if name == "planner_speed_jax":
             gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
             return ("geomean_jax_speedup_vs_numpy="
@@ -120,6 +125,12 @@ def main() -> int:
             print(f"{name},ERROR,{e!r}")
             continue
         us = (time.perf_counter() - t0) * 1e6
+        if not rows:
+            # a benchmark that silently returns nothing must fail the
+            # run, not quietly write an empty entry CI then diffs green
+            failed.append((name, "produced no rows"))
+            print(f"{name},ERROR,'produced no rows'")
+            continue
         summary[name] = rows
         print(f"{name},{us:.0f},{_derived(name, rows)}")
 

@@ -13,6 +13,7 @@ from typing import Dict, List
 
 from repro.configs.xrbench import all_tasks
 from repro.core import PAPER_HW, PlanRequest, Planner, Topology, get_planner
+from repro.core import noc as noc_mod
 from repro.core.dataflow import (achieved_arithmetic_intensity,
                                  best_case_arithmetic_intensity,
                                  choose_dataflow)
@@ -381,14 +382,18 @@ def planner_speed() -> List[dict]:
     planner_mod._pair_traffic.cache_clear()
     planner_mod._cached_place.cache_clear()
     planner_mod._span_plan_cache.clear()
+    noc_mod.route_incidence_cache_clear()
     warm_planner = Planner(maxsize=64)
 
     rows = []
     t_dp_total = t_ref_total = 0.0
     for name, g in all_tasks().items():
+        fb_h0, fb_m0, _, _ = noc_mod.flow_batch_cache_info()
         t0 = time.perf_counter()
         plan_pipeorgan(g, PAPER_HW, Topology.AMP)
         t_dp = time.perf_counter() - t0
+        fb_h1, fb_m1, _, _ = noc_mod.flow_batch_cache_info()
+        fb_hits, fb_misses = fb_h1 - fb_h0, fb_m1 - fb_m0
         t0 = time.perf_counter()
         plan_pipeorgan_reference(g, PAPER_HW, Topology.AMP)
         t_ref = time.perf_counter() - t0
@@ -402,7 +407,11 @@ def planner_speed() -> List[dict]:
         rows.append({"task": name, "dp_s": round(t_dp, 4),
                      "reference_s": round(t_ref, 4),
                      "facade_hit_us": round(t_warm * 1e6, 1),
-                     "speedup": round(t_ref / t_dp, 2)})
+                     "speedup": round(t_ref / t_dp, 2),
+                     "flow_batch_hits": fb_hits,
+                     "flow_batch_misses": fb_misses,
+                     "flow_batch_hit_rate": round(
+                         fb_hits / max(1, fb_hits + fb_misses), 3)})
     rows.append({"task": "TOTAL", "dp_s": round(t_dp_total, 3),
                  "reference_s": round(t_ref_total, 3),
                  "speedup": round(t_ref_total / t_dp_total, 2)})
@@ -416,6 +425,71 @@ def planner_speed() -> List[dict]:
     t_stage1 = (time.perf_counter() - t0) / (reps * len(tasks))
     rows.append({"task": "STAGE1", "stage1_us_per_graph":
                  round(t_stage1 * 1e6, 1)})
+    return rows
+
+
+def plan_profile() -> List[dict]:
+    """Per-phase wall-clock breakdown of one cold ``plan_pipeorgan`` pass.
+
+    Splits each task's cold plan into the three phases the perf work
+    targets: NoC traffic analysis (``noc.analyze_batch`` over the shared
+    route-incidence tables), candidate pricing (``_host_cost`` /
+    ``segment_cost``), and everything else — prep, span signatures,
+    placement, the cut-point DP itself ("DP overhead").  The shares are
+    the profile docs/engines.md quotes; a regression in any phase shows
+    up in this row's artifact diff.
+    """
+    import repro.core.planner as planner_mod
+    from repro.core import plan_pipeorgan
+
+    rows = []
+    tot = {"total": 0.0, "noc": 0.0, "price": 0.0}
+    for name, g in all_tasks().items():
+        planner_mod._pair_traffic.cache_clear()
+        planner_mod._cached_place.cache_clear()
+        planner_mod._span_plan_cache.clear()
+        noc_mod.route_incidence_cache_clear()
+        acc = {"noc": 0.0, "price": 0.0}
+
+        def _timed(fn, key, acc=acc):
+            def wrapped(*a, **k):
+                t0 = time.perf_counter()
+                try:
+                    return fn(*a, **k)
+                finally:
+                    acc[key] += time.perf_counter() - t0
+            return wrapped
+
+        orig_ab = planner_mod.analyze_batch
+        orig_hc = planner_mod._host_cost
+        planner_mod.analyze_batch = _timed(orig_ab, "noc")
+        planner_mod._host_cost = _timed(orig_hc, "price")
+        try:
+            t0 = time.perf_counter()
+            plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+            total = time.perf_counter() - t0
+        finally:
+            planner_mod.analyze_batch = orig_ab
+            planner_mod._host_cost = orig_hc
+        dp = max(0.0, total - acc["noc"] - acc["price"])
+        tot["total"] += total
+        tot["noc"] += acc["noc"]
+        tot["price"] += acc["price"]
+        rows.append({"task": name, "total_s": round(total, 4),
+                     "noc_s": round(acc["noc"], 4),
+                     "pricing_s": round(acc["price"], 4),
+                     "dp_overhead_s": round(dp, 4),
+                     "noc_pct": round(100 * acc["noc"] / total, 1),
+                     "pricing_pct": round(100 * acc["price"] / total, 1),
+                     "dp_overhead_pct": round(100 * dp / total, 1)})
+    dp_tot = max(0.0, tot["total"] - tot["noc"] - tot["price"])
+    rows.append({"task": "TOTAL", "total_s": round(tot["total"], 4),
+                 "noc_s": round(tot["noc"], 4),
+                 "pricing_s": round(tot["price"], 4),
+                 "dp_overhead_s": round(dp_tot, 4),
+                 "noc_pct": round(100 * tot["noc"] / tot["total"], 1),
+                 "pricing_pct": round(100 * tot["price"] / tot["total"], 1),
+                 "dp_overhead_pct": round(100 * dp_tot / tot["total"], 1)})
     return rows
 
 
@@ -438,6 +512,7 @@ def planner_speed_jax() -> List[dict]:
         planner_mod._pair_traffic.cache_clear()
         planner_mod._cached_place.cache_clear()
         planner_mod._span_plan_cache.clear()
+        noc_mod.route_incidence_cache_clear()
         t0 = time.perf_counter()
         plan = plan_pipeorgan(g, PAPER_HW, Topology.AMP, engine=engine)
         return time.perf_counter() - t0, plan
@@ -568,6 +643,7 @@ def plan_artifact() -> List[dict]:
                 planner_mod._cached_place.cache_clear()
                 planner_mod._span_plan_cache.clear()
                 flow_batch_cache_clear()
+                noc_mod.route_incidence_cache_clear()
                 return plan_pipeorgan(g, PAPER_HW, Topology.AMP)
             t_plan, plan = _time(replan, reps=1)
             t_save, path = _time(lambda: store.save(request, plan))
@@ -704,6 +780,7 @@ FIGURES = {
     "amp_ablation": amp_ablation,
     "simulator_validation": simulator_validation,
     "planner_speed": planner_speed,
+    "plan_profile": plan_profile,
     "planner_speed_jax": planner_speed_jax,
     "sim_speed": sim_speed,
     "sim_speed_jax": sim_speed_jax,

@@ -38,6 +38,15 @@ _WEIGHT_HEAVY_BELOW = 0.3
 _ACT_HEAVY_ABOVE = 30.0
 
 
+#: identity-keyed memo: ``Op`` carries a dims dict (unhashable), but ops are
+#: long-lived graph nodes and the planner's overlapping DP spans re-derive
+#: the same (op, budget) dataflow thousands of times per plan.  Values keep
+#: a strong ref to the op so id() can never be recycled under the key.
+_DF_CACHE: Dict[Tuple[int, HWConfig, Optional[int]],
+                Tuple[Op, Dataflow]] = {}
+_DF_CACHE_MAX = 65536
+
+
 def choose_dataflow(op: Op, hw: HWConfig,
                     sram_budget: Optional[int] = None) -> Dataflow:
     """Pick a loop order from the op's A/W ratio (paper heuristic).
@@ -45,7 +54,24 @@ def choose_dataflow(op: Op, hw: HWConfig,
     ``sram_budget``: bytes of on-chip buffer available to THIS op's tiles
     (the whole SRAM when running layer-by-layer, SRAM/depth inside a
     pipeline segment — Sec. III-A: deeper pipelines shrink the tile space).
+
+    Pure in its arguments; results are memoized by op identity, so the
+    returned ``Dataflow`` (and its ``tiles`` dict) must be treated as
+    immutable by callers.
     """
+    key = (id(op), hw, sram_budget)
+    hit = _DF_CACHE.get(key)
+    if hit is not None and hit[0] is op:
+        return hit[1]
+    df = _choose_dataflow(op, hw, sram_budget)
+    if len(_DF_CACHE) >= _DF_CACHE_MAX:
+        _DF_CACHE.clear()
+    _DF_CACHE[key] = (op, df)
+    return df
+
+
+def _choose_dataflow(op: Op, hw: HWConfig,
+                     sram_budget: Optional[int]) -> Dataflow:
     ratio = op.aw_ratio()
     budget_bytes = hw.sram_bytes if sram_budget is None else max(1, sram_budget)
     d = op.dims

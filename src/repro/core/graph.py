@@ -67,6 +67,18 @@ class Op:
         return 0
 
     def output_volume(self) -> int:
+        # memoized: the planner's DP calls this ~100k times per cold plan
+        # (burst counts, PE allocation, span signatures).  Frozen blocks
+        # normal assignment but not object.__setattr__; the memo is not a
+        # dataclass field, so eq/repr are unaffected.
+        v = self.__dict__.get("_output_volume")
+        if v is not None:
+            return v
+        v = self._output_volume_impl()
+        object.__setattr__(self, "_output_volume", v)
+        return v
+
+    def _output_volume_impl(self) -> int:
         d = self.dims
         if self.kind in (OpKind.CONV,):
             return d["N"] * d["H"] * d["W"] * d["K"]

@@ -48,11 +48,13 @@ import os
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .artifact import (PlanSchemaError, PlanStore, plan_from_dict,
                        plan_to_dict)
 from .hwconfig import HWConfig
-from .noc import (FlowBatch, Topology, analyze, interference_channel_load,
-                  offset_flow_batch)
+from .noc import (FlowBatch, Topology, analyze_batch,
+                  interference_channel_load, offset_flow_batch)
 from .pipeline_model import segment_cost, weight_dram_traffic
 from .plan_api import Constraint, PlanRequest
 from .planner import PlanResult, SegmentPlan, edge_flow_batch
@@ -296,8 +298,7 @@ def repriced_cost(seg: SegmentPlan, hw: HWConfig, topology: Topology,
     fbs = segment_flow_batches(seg)
     if fbs:
         stats = []
-        for k, fb in enumerate(fbs):
-            st = analyze(fb, hw, topology)
+        for k, st in enumerate(analyze_batch(fbs, hw, topology)):
             delta = link_deltas[k] if link_deltas else 0.0
             if delta > 0:
                 st = dataclasses.replace(
@@ -334,13 +335,14 @@ def _hot_flow_batch(plan: PlanResult, bhw: HWConfig, topology: Topology,
                     col0: int) -> Optional[FlowBatch]:
     """A tenant's steady-state interference set: its hottest edge's flow
     batch, translated into full-substrate coordinates."""
-    hot, hot_load = None, -1.0
-    for seg in plan.segments:
-        for fb in segment_flow_batches(seg):
-            load = analyze(fb, bhw, topology).worst_channel_load
-            if load > hot_load:
-                hot, hot_load = fb, load
-    return offset_flow_batch(hot, 0, col0) if hot is not None else None
+    fbs = [fb for seg in plan.segments for fb in segment_flow_batches(seg)]
+    if not fbs:
+        return None
+    # one batched sweep over every edge; argmax keeps the first maximum,
+    # matching the scalar strictly-greater scan this replaced
+    loads = [st.worst_channel_load
+             for st in analyze_batch(fbs, bhw, topology)]
+    return offset_flow_batch(fbs[int(np.argmax(loads))], 0, col0)
 
 
 # ---------------------------------------------------------------------------

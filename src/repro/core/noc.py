@@ -9,21 +9,27 @@ compute interval >= worst-case channel load (in cycles; 1 word/link/cycle).
 When congested, "the overall interval delay is worst-case channel load x
 compute interval".
 
-Two engines compute the same statistics:
+Three engines compute the same statistics:
 
-  * ``analyze``            — batched numpy path expansion; all flows are
-    routed and accumulated onto links at once (planner hot path).
+  * ``analyze_batch``      — two-phase batched engine (planner hot path):
+    a words-independent ``RouteIncidence`` table is expanded once per flow
+    coordinate set and cached, then a whole frontier of candidate flow
+    sets is priced in one segment-sum pass over the shared incidence.
+  * ``analyze``            — batched numpy path expansion; all flows of one
+    set are routed and accumulated onto links at once.
   * ``analyze_reference``  — the original per-flow scalar walk, kept as the
-    semantic reference; tests assert the two agree on every topology.
+    semantic reference; tests assert all three agree bit-for-bit on every
+    topology.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import enum
+import hashlib
 import threading
 from collections import defaultdict
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -463,8 +469,14 @@ def pair_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
     dst_a = placement.pes_of(dst_slot)
     if src_a.size == 0 or dst_a.size == 0:
         return FlowBatch.empty()
-    d = (np.abs(src_a[:, None, 0] - dst_a[None, :, 0])
-         + np.abs(src_a[:, None, 1] - dst_a[None, :, 1]))
+    # int32 distance matrix (coordinates are tiny, distances exact) — the
+    # n_src x n_dst block is the planner's biggest single allocation, and
+    # halving its width roughly halves this function's wall-clock; the
+    # in-place += drops one further (n_src, n_dst) temporary.
+    s32 = src_a.astype(np.int32)
+    t32 = dst_a.astype(np.int32)
+    d = np.abs(s32[:, None, 0] - t32[None, :, 0])
+    d += np.abs(s32[:, None, 1] - t32[None, :, 1])
     nearest = np.argmin(d, axis=1)
     per_src = words_per_interval / len(src_a)
     return FlowBatch(src_a.astype(np.int64),
@@ -590,6 +602,13 @@ class LRUCache:
 
 _FLOW_BATCH_CACHE = LRUCache(maxsize=8192)
 
+#: coordinate-level sibling of ``_FLOW_BATCH_CACHE``: both generators give
+#: every flow of a pair the SAME per-flow volume (``words / n_src``), so a
+#: pair's (src, dst) arrays are independent of the word count.  Re-pricing
+#: a placement pair with new words — the DP does it constantly — then
+#: costs one ``np.full`` instead of a full chain/nearest regeneration.
+_FLOW_COORD_CACHE = LRUCache(maxsize=8192)
+
 
 def placement_key(placement: Placement) -> Tuple:
     """Hashable identity of a placement's flow-relevant content.
@@ -611,12 +630,28 @@ def cached_flow_batch(placement: Placement, src_slot: int, dst_slot: int,
     is bit-identical to a regeneration — the differential parity contracts
     downstream rely on that.
     """
-    key = (placement_key(placement), src_slot, dst_slot,
-           float(words_per_interval), bool(fine))
+    pkey = placement_key(placement)
+    key = (pkey, src_slot, dst_slot, float(words_per_interval), bool(fine))
     fb = _FLOW_BATCH_CACHE.get(key)
     if fb is None:
-        gen = pair_flow_batch if fine else multicast_flow_batch
-        fb = gen(placement, src_slot, dst_slot, words_per_interval)
+        ckey = (pkey, src_slot, dst_slot, bool(fine))
+        coords = _FLOW_COORD_CACHE.get(ckey)
+        if coords is None:
+            gen = pair_flow_batch if fine else multicast_flow_batch
+            fb = gen(placement, src_slot, dst_slot, words_per_interval)
+            n_src = int(placement.pes_of(src_slot).shape[0])
+            _FLOW_COORD_CACHE.put(ckey, (fb.src, fb.dst, n_src))
+        else:
+            src_a, dst_a, n_src = coords
+            if n_src == 0:
+                fb = FlowBatch.empty()
+            else:
+                # words / n_src is the exact expression both generators
+                # evaluate, so the refill is bit-identical to regenerating
+                fb = FlowBatch(src_a, dst_a,
+                               np.full(src_a.shape[0],
+                                       words_per_interval / n_src,
+                                       np.float64))
         _FLOW_BATCH_CACHE.put(key, fb)
     return fb
 
@@ -627,6 +662,537 @@ def flow_batch_cache_info() -> Tuple[int, int, int, int]:
 
 def flow_batch_cache_clear() -> None:
     _FLOW_BATCH_CACHE.clear()
+    _FLOW_COORD_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Batched cross-candidate analysis: RouteIncidence + analyze_batch
+# ---------------------------------------------------------------------------
+#
+# Routes are a pure function of flow *coordinates* — bytes only scale the
+# per-link accumulation.  The planner's DP re-prices the same coordinate
+# sets with different byte vectors constantly (every (cut, org, staging)
+# candidate on the same grid), so ``analyze`` pays the expensive half
+# (path expansion, port arbitration, link-code dedup) over and over.
+# ``RouteIncidence`` precomputes that half once per coordinate set as
+# CSR-style incidence arrays; ``analyze_batch`` then prices a whole
+# frontier of flow sets in one segment-sum pass over the cached tables,
+# bit-identical to per-set ``analyze`` calls (same step order, same
+# per-bin accumulation order, same pairwise sums).
+
+
+@dataclasses.dataclass
+class RouteIncidence:
+    """Words-independent half of ``analyze`` for one flow coordinate set.
+
+    ``fidx[s]`` / ``inv[s]`` map expanded step ``s`` (flow-major, the
+    scalar walk's (flow, hop) order) to its kept-flow index and compact
+    link id; ``uniq[l]`` is link ``l``'s global code (``src_node * N +
+    dst_node`` for wires, ``N*N + dst_node*4 + port`` for the adaptive
+    last-hop ingress ports).  Valid for any byte vector that keeps the
+    same flows ``analyze`` would keep — i.e. every coordinate-kept flow
+    has positive words (``valid_for``); zero-word flows shift the
+    flow-order port arbitration, so those batches fall back to
+    ``analyze``.
+    """
+    rows: int
+    cols: int
+    topology: Topology
+    express: int
+    keep: np.ndarray        # bool [n_flows]: src != dst (coordinate keep)
+    path_len: np.ndarray    # int64 [n_kept] hops per kept flow
+    fidx: np.ndarray        # intp  [n_steps] kept-flow index per step
+    inv: np.ndarray         # intp  [n_steps] compact link id per step
+    wire: np.ndarray        # int64 [n_steps] physical wire length per step
+    uniq: np.ndarray        # int64 [n_links] sorted global link codes
+    max_path_hops: int
+    link_count: int
+    _link_keys: Optional[List[object]] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def n_links(self) -> int:
+        return int(self.uniq.shape[0])
+
+    def valid_for(self, words: np.ndarray) -> bool:
+        """True when this table prices ``words`` exactly (no kept flow
+        would be dropped by ``analyze``'s ``words > 0`` filter)."""
+        return bool(np.all(words[self.keep] > 0))
+
+    def link_keys(self) -> List[object]:
+        """Decoded link keys aligned with ``uniq`` — the same objects the
+        scalar engines key their load maps on (``route()`` links, plus
+        ``(dst, "in", port)`` ingress keys), lazily cached."""
+        if self._link_keys is None:
+            N = self.rows * self.cols
+            cols = self.cols
+            keys: List[object] = []
+            for code in self.uniq.tolist():
+                if code < N * N:
+                    s, d = divmod(code, N)
+                    keys.append(((s // cols, s % cols),
+                                 (d // cols, d % cols)))
+                else:
+                    d, port = divmod(code - N * N, 4)
+                    keys.append(((d // cols, d % cols), "in", port))
+            self._link_keys = keys
+        return self._link_keys
+
+
+def _build_incidence(src: np.ndarray, dst: np.ndarray, rows: int, cols: int,
+                     topology: Topology, express: int) -> RouteIncidence:
+    """Expand one coordinate set's routes (``analyze`` phases 1-2, words
+    stripped).  Step order, port arbitration and link codes replicate
+    ``analyze`` exactly — the bit-parity contract every consumer rides."""
+    link_count = topology_link_count(rows, cols, topology, express)
+    sr0, sc0 = src[:, 0], src[:, 1]
+    dr0, dc0 = dst[:, 0], dst[:, 1]
+    keep = (sr0 != dr0) | (sc0 != dc0)
+    sr, sc, dr, dc = sr0[keep], sc0[keep], dr0[keep], dc0[keep]
+    n = int(sr.shape[0])
+    if n == 0:
+        z = np.zeros(0, np.int64)
+        return RouteIncidence(rows, cols, topology, express, keep,
+                              z, z, z, z, z, 0, link_count)
+
+    N = rows * cols
+    dstn = dr * cols + dc
+
+    # adaptive last-hop arbitration: the k-th kept flow converging on a
+    # consumer PE takes ingress port k mod 4 (stable group-cumcount)
+    order = np.argsort(dstn, kind="stable")
+    sorted_d = dstn[order]
+    grp_start = np.flatnonzero(np.r_[True, sorted_d[1:] != sorted_d[:-1]])
+    grp_sizes = np.diff(np.r_[grp_start, n])
+    cum = np.arange(n) - np.repeat(grp_start, grp_sizes)
+    port = np.empty(n, np.int64)
+    port[order] = cum % 4
+
+    phases = []  # (flow_idx, global_step, src_node, dst_node, wire_len)
+    if topology == Topology.FLATTENED_BUTTERFLY:
+        hasx = sc != dc
+        hasy = sr != dr
+        fx = np.flatnonzero(hasx)
+        phases.append((fx, np.zeros(fx.size, np.int64),
+                       sr[fx] * cols + sc[fx], sr[fx] * cols + dc[fx],
+                       np.abs(dc[fx] - sc[fx])))
+        fy = np.flatnonzero(hasy)
+        phases.append((fy, hasx[fy].astype(np.int64),
+                       sr[fy] * cols + dc[fy], dr[fy] * cols + dc[fy],
+                       np.abs(dr[fy] - sr[fy])))
+        path_len = hasx.astype(np.int64) + hasy.astype(np.int64)
+    else:
+        wrap = topology == Topology.TORUS
+        dx = dc - sc
+        dy = dr - sr
+        if wrap:
+            dx = np.where(np.abs(dx) > cols // 2, dx - cols * np.sign(dx), dx)
+            dy = np.where(np.abs(dy) > rows // 2, dy - rows * np.sign(dy), dy)
+        sx = np.where(dx >= 0, 1, -1)
+        sy = np.where(dy >= 0, 1, -1)
+        ax, ay = np.abs(dx), np.abs(dy)
+        use_express = topology == Topology.AMP and express > 1
+        ex = ax // express if use_express else np.zeros_like(ax)
+        ey = ay // express if use_express else np.zeros_like(ay)
+        ux, uy = ax - ex * express, ay - ey * express
+        path_len = ex + ux + ey + uy
+
+        def walk(counts, start, stride, fixed, along_cols, step_off, wlen,
+                 size):
+            fidx, t = _expand(counts)
+            if fidx.size == 0:
+                return None
+            cur = start[fidx] + stride[fidx] * t
+            nxt = cur + stride[fidx]
+            if wrap:
+                cur, nxt = cur % size, nxt % size
+            if along_cols:
+                s_node = fixed[fidx] * cols + cur
+                d_node = fixed[fidx] * cols + nxt
+            else:
+                s_node = cur * cols + fixed[fidx]
+                d_node = nxt * cols + fixed[fidx]
+            return (fidx, step_off[fidx] + t, s_node, d_node,
+                    np.full(fidx.size, wlen, np.int64))
+
+        for ph in (walk(ex, sc, sx * express, sr, True,
+                        np.zeros(n, np.int64), express, cols),
+                   walk(ux, sc + sx * ex * express, sx, sr, True, ex, 1,
+                        cols),
+                   walk(ey, sr, sy * express, dc, False, ex + ux, express,
+                        rows),
+                   walk(uy, sr + sy * ey * express, sy, dc, False,
+                        ex + ux + ey, 1, rows)):
+            if ph is not None:
+                phases.append(ph)
+
+    total = int(path_len.sum())
+    path_start = np.cumsum(path_len) - path_len
+    srcn_all = np.empty(total, np.int64)
+    dstn_all = np.empty(total, np.int64)
+    wire_all = np.empty(total, np.int64)
+    for fidx, step, s_node, d_node, wlen in phases:
+        pos = path_start[fidx] + step
+        srcn_all[pos] = s_node
+        dstn_all[pos] = d_node
+        wire_all[pos] = wlen
+    fidx_all = np.repeat(np.arange(n), path_len)
+
+    is_last = np.zeros(total, bool)
+    is_last[path_start + path_len - 1] = True
+    codes = np.where(is_last,
+                     N * N + dstn[fidx_all] * 4 + port[fidx_all],
+                     srcn_all * N + dstn_all)
+    uniq, inv = np.unique(codes, return_inverse=True)
+    return RouteIncidence(rows, cols, topology, express, keep, path_len,
+                          fidx_all, inv.reshape(-1), wire_all, uniq,
+                          int(path_len.max()), link_count)
+
+
+def _build_incidence_batch(coords: Sequence[Tuple[np.ndarray, np.ndarray]],
+                           rows: int, cols: int, topology: Topology,
+                           express: int) -> List[RouteIncidence]:
+    """Vectorized ``_build_incidence`` over MANY coordinate sets at once.
+
+    A cold DP frontier misses hundreds of distinct coordinate sets whose
+    individual builds are dominated by fixed numpy call overhead (~30
+    array ops each on a few-thousand-step set).  Concatenating the sets
+    with a set-id prefix runs the same ops once over the union:
+
+      * port arbitration sorts on ``sid * N + dstn`` — a stable set-major
+        key, so each set's group-cumcount is untouched by its neighbours;
+      * the route walk and link codes are elementwise per flow;
+      * one ``np.unique`` over ``sid * CODE_SPACE + code`` yields every
+        set's sorted link table as a contiguous slice (the quotient is
+        the set id, the remainder the in-set code — and within a set the
+        combined order IS the code order).
+
+    Each returned table is bit-identical to ``_build_incidence`` on its
+    set, which the batch-vs-scalar parity tests pin.
+    """
+    nsets = len(coords)
+    link_count = topology_link_count(rows, cols, topology, express)
+    raw_counts = np.array([int(s.shape[0]) for s, _ in coords], np.int64)
+    roff = np.cumsum(raw_counts) - raw_counts
+    src = np.concatenate([s for s, _ in coords]) if nsets else \
+        np.zeros((0, 2), np.int64)
+    dst = np.concatenate([d for _, d in coords]) if nsets else \
+        np.zeros((0, 2), np.int64)
+    sr0, sc0 = src[:, 0], src[:, 1]
+    dr0, dc0 = dst[:, 0], dst[:, 1]
+    keep = (sr0 != dr0) | (sc0 != dc0)
+    sid_raw = np.repeat(np.arange(nsets), raw_counts)
+    sid = sid_raw[keep]
+    sr, sc, dr, dc = sr0[keep], sc0[keep], dr0[keep], dc0[keep]
+    n = int(sr.shape[0])
+    kept_counts = np.bincount(sid, minlength=nsets).astype(np.int64)
+    foff = np.cumsum(kept_counts) - kept_counts
+
+    def _zero(s: int) -> RouteIncidence:
+        z = np.zeros(0, np.int64)
+        ks = keep[roff[s]:roff[s] + raw_counts[s]]
+        return RouteIncidence(rows, cols, topology, express, ks,
+                              z, z, z, z, z, 0, link_count)
+
+    if n == 0:
+        return [_zero(s) for s in range(nsets)]
+
+    N = rows * cols
+    dstn = dr * cols + dc
+
+    # per-set adaptive last-hop arbitration (see _build_incidence)
+    order = np.argsort(sid * N + dstn, kind="stable")
+    sorted_k = (sid * N + dstn)[order]
+    grp_start = np.flatnonzero(np.r_[True, sorted_k[1:] != sorted_k[:-1]])
+    grp_sizes = np.diff(np.r_[grp_start, n])
+    cum = np.arange(n) - np.repeat(grp_start, grp_sizes)
+    port = np.empty(n, np.int64)
+    port[order] = cum % 4
+
+    phases = []
+    if topology == Topology.FLATTENED_BUTTERFLY:
+        hasx = sc != dc
+        hasy = sr != dr
+        fx = np.flatnonzero(hasx)
+        phases.append((fx, np.zeros(fx.size, np.int64),
+                       sr[fx] * cols + sc[fx], sr[fx] * cols + dc[fx],
+                       np.abs(dc[fx] - sc[fx])))
+        fy = np.flatnonzero(hasy)
+        phases.append((fy, hasx[fy].astype(np.int64),
+                       sr[fy] * cols + dc[fy], dr[fy] * cols + dc[fy],
+                       np.abs(dr[fy] - sr[fy])))
+        path_len = hasx.astype(np.int64) + hasy.astype(np.int64)
+    else:
+        wrap = topology == Topology.TORUS
+        dx = dc - sc
+        dy = dr - sr
+        if wrap:
+            dx = np.where(np.abs(dx) > cols // 2, dx - cols * np.sign(dx), dx)
+            dy = np.where(np.abs(dy) > rows // 2, dy - rows * np.sign(dy), dy)
+        sx = np.where(dx >= 0, 1, -1)
+        sy = np.where(dy >= 0, 1, -1)
+        ax, ay = np.abs(dx), np.abs(dy)
+        use_express = topology == Topology.AMP and express > 1
+        ex = ax // express if use_express else np.zeros_like(ax)
+        ey = ay // express if use_express else np.zeros_like(ay)
+        ux, uy = ax - ex * express, ay - ey * express
+        path_len = ex + ux + ey + uy
+
+        def walk(counts, start, stride, fixed, along_cols, step_off, wlen,
+                 size):
+            fidx, t = _expand(counts)
+            if fidx.size == 0:
+                return None
+            cur = start[fidx] + stride[fidx] * t
+            nxt = cur + stride[fidx]
+            if wrap:
+                cur, nxt = cur % size, nxt % size
+            if along_cols:
+                s_node = fixed[fidx] * cols + cur
+                d_node = fixed[fidx] * cols + nxt
+            else:
+                s_node = cur * cols + fixed[fidx]
+                d_node = nxt * cols + fixed[fidx]
+            return (fidx, step_off[fidx] + t, s_node, d_node,
+                    np.full(fidx.size, wlen, np.int64))
+
+        for ph in (walk(ex, sc, sx * express, sr, True,
+                        np.zeros(n, np.int64), express, cols),
+                   walk(ux, sc + sx * ex * express, sx, sr, True, ex, 1,
+                        cols),
+                   walk(ey, sr, sy * express, dc, False, ex + ux, express,
+                        rows),
+                   walk(uy, sr + sy * ey * express, sy, dc, False,
+                        ex + ux + ey, 1, rows)):
+            if ph is not None:
+                phases.append(ph)
+
+    total = int(path_len.sum())
+    path_start = np.cumsum(path_len) - path_len
+    srcn_all = np.empty(total, np.int64)
+    dstn_all = np.empty(total, np.int64)
+    wire_all = np.empty(total, np.int64)
+    for fidx, step, s_node, d_node, wlen in phases:
+        pos = path_start[fidx] + step
+        srcn_all[pos] = s_node
+        dstn_all[pos] = d_node
+        wire_all[pos] = wlen
+    fidx_all = np.repeat(np.arange(n), path_len)
+
+    is_last = np.zeros(total, bool)
+    is_last[path_start + path_len - 1] = True
+    codes = np.where(is_last,
+                     N * N + dstn[fidx_all] * 4 + port[fidx_all],
+                     srcn_all * N + dstn_all)
+    code_space = N * N + 4 * N
+    uniq_c, inv_c = np.unique(sid[fidx_all] * code_space + codes,
+                              return_inverse=True)
+    inv_c = inv_c.reshape(-1)
+    bounds = np.searchsorted(uniq_c // code_space, np.arange(nsets + 1))
+    uniq_local = uniq_c % code_space
+    step_tot = np.zeros(nsets, np.int64)
+    np.add.at(step_tot, sid, path_len)
+    soff = np.cumsum(step_tot) - step_tot
+
+    out: List[RouteIncidence] = []
+    for s in range(nsets):
+        ns = int(kept_counts[s])
+        if ns == 0:
+            out.append(_zero(s))
+            continue
+        f0, s0, s1 = foff[s], soff[s], soff[s] + step_tot[s]
+        pl = path_len[f0:f0 + ns]
+        out.append(RouteIncidence(
+            rows, cols, topology, express,
+            keep[roff[s]:roff[s] + raw_counts[s]], pl,
+            fidx_all[s0:s1] - f0, inv_c[s0:s1] - bounds[s],
+            wire_all[s0:s1], uniq_local[bounds[s]:bounds[s + 1]],
+            int(pl.max()), link_count))
+    return out
+
+
+_ROUTE_INCIDENCE_CACHE = LRUCache(maxsize=4096)
+
+
+def route_incidence(fb: FlowBatch, hw: HWConfig, topology: Topology,
+                    token: Optional[Tuple] = None) -> RouteIncidence:
+    """Memoized incidence table for a flow batch's coordinate set.
+
+    Keyed on (grid shape, topology, express, coordinate digest) — the
+    byte vector is deliberately excluded, which is the whole point: every
+    candidate re-pricing the same placement pair hits one table.
+
+    ``token``: an optional hashable identity the *caller* guarantees
+    determines the coordinate set (e.g. the planner's (placement key,
+    slot, skip pairs) tuple).  When given, a warm lookup skips hashing
+    the coordinate arrays entirely — the digest is the dominant per-call
+    cost once tables are warm.  A token miss falls through to the
+    content-addressed entry and ALIASES it (two dict entries, one shared
+    table), so distinct tokens over identical coordinates — overlapping
+    DP spans, re-planned orgs — never build the table twice.
+    """
+    express = hw.amp_link_len if topology == Topology.AMP else 1
+    tkey = None
+    if token is not None:
+        tkey = (hw.pe_rows, hw.pe_cols, topology.value, express,
+                "tok", token)
+        inc = _ROUTE_INCIDENCE_CACHE.get(tkey)
+        if inc is not None:
+            return inc
+    src = np.ascontiguousarray(fb.src, np.int64)
+    dst = np.ascontiguousarray(fb.dst, np.int64)
+    digest = hashlib.blake2b(src.tobytes() + dst.tobytes(),
+                             digest_size=16).digest()
+    key = (hw.pe_rows, hw.pe_cols, topology.value, express,
+           int(src.shape[0]), digest)
+    inc = _ROUTE_INCIDENCE_CACHE.get(key)
+    if inc is None:
+        inc = _build_incidence(src, dst, hw.pe_rows, hw.pe_cols, topology,
+                               express)
+        _ROUTE_INCIDENCE_CACHE.put(key, inc)
+    if tkey is not None:
+        _ROUTE_INCIDENCE_CACHE.put(tkey, inc)
+    return inc
+
+
+def route_incidence_cache_info() -> Tuple[int, int, int, int]:
+    return _ROUTE_INCIDENCE_CACHE.info()
+
+
+def route_incidence_cache_clear() -> None:
+    _ROUTE_INCIDENCE_CACHE.clear()
+
+
+def _incidence_stats(inc: RouteIncidence, w_kept: np.ndarray,
+                     topology: Topology) -> TrafficStats:
+    """Price one byte vector over a prebuilt incidence (phase 2)."""
+    if inc.path_len.shape[0] == 0:
+        return TrafficStats(topology, 0.0, 0.0, 0.0, 0, 0, inc.link_count)
+    words_l = w_kept[inc.fidx]
+    loads = np.bincount(inc.inv, weights=words_l, minlength=inc.n_links)
+    return TrafficStats(
+        topology=topology,
+        worst_channel_load=float(loads.max()),
+        total_hop_words=float(np.sum(w_kept * inc.path_len)),
+        total_wire_words=float(np.sum(words_l * inc.wire)),
+        max_path_hops=inc.max_path_hops,
+        num_links_used=inc.n_links,
+        link_count=inc.link_count,
+    )
+
+
+def analyze_cached(flows, hw: HWConfig, topology: Topology) -> TrafficStats:
+    """Incidence-cached ``analyze``: bit-identical results, route
+    expansion amortized across every byte vector on the same coordinates."""
+    fb = flows if isinstance(flows, FlowBatch) else FlowBatch.from_flows(flows)
+    inc = route_incidence(fb, hw, topology)
+    w = fb.words.astype(np.float64)
+    if not inc.valid_for(w):
+        return analyze(fb, hw, topology)
+    return _incidence_stats(inc, w[inc.keep], topology)
+
+
+def analyze_batch(batches: Sequence, hw: HWConfig, topology: Topology,
+                  tokens: Optional[Sequence[Optional[Tuple]]] = None
+                  ) -> List[TrafficStats]:
+    """Price a whole frontier of flow sets in one vectorized pass.
+
+    Equivalent to ``[analyze(fb, hw, topology) for fb in batches]`` —
+    bit-identical, gated by the parity suites — but the per-set route
+    expansion comes from the shared ``RouteIncidence`` cache and the
+    per-link accumulation of every set runs as a single ``np.bincount``
+    over offset link ids (per-set code blocks are disjoint, so each
+    link's float accumulation order is unchanged).  Sets with zero-word
+    flows (which shift port arbitration) fall back to plain ``analyze``.
+
+    ``tokens`` optionally provides one ``route_incidence`` cache token per
+    batch (None entries fall back to the content digest).
+    """
+    express = hw.amp_link_len if topology == Topology.AMP else 1
+    link_count = topology_link_count(hw.pe_rows, hw.pe_cols, topology,
+                                     express)
+    base = (hw.pe_rows, hw.pe_cols, topology.value, express)
+    fbs = [flows if isinstance(flows, FlowBatch)
+           else FlowBatch.from_flows(flows) for flows in batches]
+
+    # resolve every batch's incidence table: token hit -> digest hit ->
+    # batch-build ALL misses in one vectorized _build_incidence_batch pass
+    # (deduped by content digest, so identical coordinate sets appearing
+    # under several tokens share one table)
+    incs: List[Optional[RouteIncidence]] = [None] * len(fbs)
+    waiting: dict = {}          # digest key -> [(batch idx, token key)]
+    build_keys: List[Tuple] = []
+    build_coords: List[Tuple[np.ndarray, np.ndarray]] = []
+    for b, fb in enumerate(fbs):
+        token = tokens[b] if tokens is not None else None
+        tkey = base + ("tok", token) if token is not None else None
+        if tkey is not None:
+            inc = _ROUTE_INCIDENCE_CACHE.get(tkey)
+            if inc is not None:
+                incs[b] = inc
+                continue
+        src = np.ascontiguousarray(fb.src, np.int64)
+        dst = np.ascontiguousarray(fb.dst, np.int64)
+        digest = hashlib.blake2b(src.tobytes() + dst.tobytes(),
+                                 digest_size=16).digest()
+        key = base + (int(src.shape[0]), digest)
+        inc = _ROUTE_INCIDENCE_CACHE.get(key)
+        if inc is not None:
+            incs[b] = inc
+            if tkey is not None:
+                _ROUTE_INCIDENCE_CACHE.put(tkey, inc)
+            continue
+        ent = waiting.get(key)
+        if ent is None:
+            waiting[key] = [(b, tkey)]
+            build_keys.append(key)
+            build_coords.append((src, dst))
+        else:
+            ent.append((b, tkey))
+    if build_coords:
+        for key, inc in zip(build_keys,
+                            _build_incidence_batch(
+                                build_coords, hw.pe_rows, hw.pe_cols,
+                                topology, express)):
+            _ROUTE_INCIDENCE_CACHE.put(key, inc)
+            for b, tkey in waiting[key]:
+                incs[b] = inc
+                if tkey is not None:
+                    _ROUTE_INCIDENCE_CACHE.put(tkey, inc)
+
+    out: List[Optional[TrafficStats]] = [None] * len(batches)
+    vec: List[Tuple[int, RouteIncidence, np.ndarray]] = []
+    for b, fb in enumerate(fbs):
+        inc = incs[b]
+        w = fb.words.astype(np.float64)
+        if not inc.valid_for(w):
+            out[b] = analyze(fb, hw, topology)
+        elif inc.path_len.shape[0] == 0:
+            out[b] = TrafficStats(topology, 0.0, 0.0, 0.0, 0, 0, link_count)
+        else:
+            vec.append((b, inc, w[inc.keep]))
+    if not vec:
+        return out  # type: ignore[return-value]
+
+    nlinks = np.array([inc.n_links for _, inc, _ in vec], np.int64)
+    off = np.cumsum(nlinks) - nlinks
+    per_words = [w_kept[inc.fidx] for _, inc, w_kept in vec]
+    codes_all = np.concatenate([inc.inv.astype(np.int64) + o
+                                for (_, inc, _), o in zip(vec, off)])
+    loads = np.bincount(codes_all, weights=np.concatenate(per_words),
+                        minlength=int(nlinks.sum()))
+    worsts = np.maximum.reduceat(loads, off)
+    for (b, inc, w_kept), words_l, worst in zip(vec, per_words, worsts):
+        out[b] = TrafficStats(
+            topology=topology,
+            worst_channel_load=float(worst),
+            total_hop_words=float(np.sum(w_kept * inc.path_len)),
+            total_wire_words=float(np.sum(words_l * inc.wire)),
+            max_path_hops=inc.max_path_hops,
+            num_links_used=inc.n_links,
+            link_count=inc.link_count,
+        )
+    return out  # type: ignore[return-value]
 
 
 # ---------------------------------------------------------------------------
@@ -698,7 +1264,44 @@ def interference_channel_load(own: FlowBatch,
     pays on its hottest shared channel; it is exactly zero when the
     tenants' routes are link-disjoint (e.g. column bands under
     dimension-ordered routing with no overlapping columns).
+
+    Runs on the shared ``RouteIncidence`` table (the union batch's steps
+    keep others-then-own order, so per-link accumulation and the scalar
+    subtraction come out bit-identical to the reference walk below);
+    zero-word flows fall back to the scalar engine.
     """
+    if not len(own):
+        return 0.0, 0.0
+    union = FlowBatch.concat([*others, own])
+    inc = route_incidence(union, hw, topology)
+    w = union.words.astype(np.float64)
+    if not inc.valid_for(w):
+        return interference_channel_load_reference(own, others, hw, topology)
+    if inc.path_len.shape[0] == 0:
+        return 0.0, 0.0
+    n_other = len(union) - len(own)
+    w_kept = w[inc.keep]
+    words_l = w_kept[inc.fidx]
+    # own's steps are exactly the tail kept-flow indices
+    n_other_kept = int(np.count_nonzero(inc.keep[:n_other]))
+    own_step = inc.fidx >= n_other_kept
+    if not np.any(own_step):
+        return 0.0, 0.0
+    loads = np.bincount(inc.inv, weights=words_l, minlength=inc.n_links)
+    base = np.bincount(inc.inv[~own_step], weights=words_l[~own_step],
+                       minlength=inc.n_links)
+    own_links = np.unique(inc.inv[own_step])
+    shared = float(loads[own_links].max())
+    solo = float((loads[own_links] - base[own_links]).max())
+    return solo, shared
+
+
+def interference_channel_load_reference(own: FlowBatch,
+                                        others: Sequence[FlowBatch],
+                                        hw: HWConfig, topology: Topology
+                                        ) -> Tuple[float, float]:
+    """Scalar reference walk for ``interference_channel_load`` (also the
+    fallback for batches the incidence table cannot price exactly)."""
     if not len(own):
         return 0.0, 0.0
     rows, cols = hw.pe_rows, hw.pe_cols

@@ -8,8 +8,10 @@ batch are priced in one ``jit``-compiled ``vmap`` call:
 
   * the host (``build_row``) prepares everything that is cheap and
     irregular — dataflows, granularities, PE allocation, NoC traffic
-    analysis (``_pair_traffic`` stays host-side and lru-cached), DRAM /
-    SRAM byte totals, the compute lower bound;
+    analysis (``_pair_traffic`` stays host-side, served by whole-sweep
+    ``noc.analyze_batch`` passes over cached ``RouteIncidence`` tables
+    and LRU-cached per pair), DRAM / SRAM byte totals, the compute
+    lower bound;
   * the device function replays only the sequential part numpy cannot
     batch: per-edge ``delta`` chaining (producer-side rate floors follow
     DAG paths), congestion capping, pipeline-fill critical paths and the

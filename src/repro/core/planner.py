@@ -43,9 +43,10 @@ from .graph import (BranchRegion, COMPLEX_KINDS, Graph, Op, OpKind,
                     branch_regions)
 from .granularity import Granularity, finest_granularity
 from .hwconfig import HWConfig
-from .noc import (FlowBatch, Topology, TrafficStats, analyze,
-                  analyze_reference, cached_flow_batch, join_flow_batch,
-                  multicast_flows, pair_flows)
+from .noc import (FlowBatch, LRUCache, Topology, TrafficStats,
+                  analyze_batch, analyze_reference, cached_flow_batch,
+                  join_flow_batch, multicast_flows, pair_flows,
+                  route_incidence_cache_info)
 from .pipeline_model import (SegmentCost, chain_edges, edge_burst_count,
                              op_work, segment_cost)
 from .spatial import (Placement, SpatialOrg, allocate_pes, choose_spatial_org,
@@ -131,9 +132,22 @@ class PlanResult:
 # ---------------------------------------------------------------------------
 
 
+#: identity-keyed span memos.  Graphs are unhashable (ops carry dims
+#: dicts) but long-lived, and the cut-point DP revisits every span several
+#: times per org/staging variant; values hold a strong ref to the graph so
+#: id() cannot be recycled while the entry lives.
+_SKIP_TRAFFIC_CACHE: Dict[Tuple[int, int, int], Tuple[Graph, Tuple]] = {}
+_SPAN_SIG_CACHE: Dict[Tuple[int, int, int], Tuple[Graph, Tuple]] = {}
+_SPAN_MEMO_MAX = 16384
+
+
 def _segment_skip_traffic(g: Graph, seg: Segment
                           ) -> Tuple[List[Tuple[int, int, int]], float]:
     """(intra-segment skip slot pairs with volume), crossing bytes."""
+    key = (id(g), seg.start, seg.stop)
+    hit = _SKIP_TRAFFIC_CACHE.get(key)
+    if hit is not None and hit[0] is g:
+        return hit[1]
     intra: List[Tuple[int, int, int]] = []
     crossing = 0
     for p, c in g.skip_edges():
@@ -142,6 +156,9 @@ def _segment_skip_traffic(g: Graph, seg: Segment
             intra.append((p - seg.start, c - seg.start, vol))
         elif (p in seg) != (c in seg):
             crossing += vol
+    if len(_SKIP_TRAFFIC_CACHE) >= _SPAN_MEMO_MAX:
+        _SKIP_TRAFFIC_CACHE.clear()
+    _SKIP_TRAFFIC_CACHE[key] = (g, (intra, crossing))
     return intra, crossing
 
 
@@ -151,24 +168,66 @@ def _cached_place(org: SpatialOrg, pe_alloc: Tuple[int, ...],
     return place(org, [float(p) for p in pe_alloc], hw)
 
 
-@functools.lru_cache(maxsize=65536)
+_PAIR_TRAFFIC_CACHE = LRUCache(maxsize=65536)
+
+#: one pair sweep request: (j, words, skips) — see ``_pair_traffic``
+_PairReq = Tuple[int, float, Tuple[Tuple[int, int, float], ...]]
+
+
+def _pair_traffic_sweep(org: SpatialOrg, pe_alloc: Tuple[int, ...],
+                        hw: HWConfig, topology: Topology, fine: bool,
+                        reqs: Sequence[_PairReq]) -> List[TrafficStats]:
+    """A whole sweep of pipeline-pair traffic stats, cached per pair.
+
+    The flows are a pure function of the key (the placement grid is itself
+    a pure function of (org, pe_alloc)), and the DP re-encounters the same
+    signatures constantly — overlapping spans of repeated same-shape
+    layers, re-planned topologies — so the cache collapses the planner's
+    dominant cost.  Every missing pair of the sweep is priced in ONE
+    ``analyze_batch`` call over the shared route-incidence tables instead
+    of one ``analyze`` per pair per candidate (the PR 8 tentpole).
+    """
+    keys = [(org, pe_alloc, j, words, skips, hw, topology, fine)
+            for j, words, skips in reqs]
+    stats: List[Optional[TrafficStats]] = [
+        _PAIR_TRAFFIC_CACHE.get(k) for k in keys]
+    missing = [i for i, st in enumerate(stats) if st is None]
+    if missing:
+        placement = _cached_place(org, pe_alloc, hw)
+        fbs = []
+        tokens = []
+        for i in missing:
+            j, words, skips = reqs[i]
+            parts = [cached_flow_batch(placement, j, j + 1, words, fine)]
+            for s, t, w in skips:
+                parts.append(cached_flow_batch(placement, s, t, w, fine))
+            fbs.append(FlowBatch.concat(parts))
+            # the coordinate set is a pure function of this tuple, so it
+            # serves as a route_incidence cache token: the incidence
+            # lookup skips hashing the (src, dst) arrays — the dominant
+            # per-pair cost once the tables are warm
+            tokens.append((org, pe_alloc, hw, fine, j,
+                           tuple((s, t) for s, t, _ in skips)))
+        for i, st in zip(missing,
+                         analyze_batch(fbs, hw, topology, tokens=tokens)):
+            _PAIR_TRAFFIC_CACHE.put(keys[i], st)
+            stats[i] = st
+    return stats  # type: ignore[return-value]
+
+
 def _pair_traffic(org: SpatialOrg, pe_alloc: Tuple[int, ...], j: int,
                   words: float, skips: Tuple[Tuple[int, int, float], ...],
                   hw: HWConfig, topology: Topology, fine: bool
                   ) -> TrafficStats:
-    """One pipeline pair's traffic stats, cached across sub-segment spans.
+    """One pipeline pair's traffic stats (single-key ``_pair_traffic_sweep``)."""
+    return _pair_traffic_sweep(org, pe_alloc, hw, topology, fine,
+                               [(j, words, skips)])[0]
 
-    The flows are a pure function of these arguments (the placement grid is
-    itself a pure function of (org, pe_alloc)), and the DP re-encounters
-    the same signatures constantly — overlapping spans of repeated
-    same-shape layers, re-planned topologies — so this cache collapses the
-    planner's dominant cost.
-    """
-    placement = _cached_place(org, pe_alloc, hw)
-    parts = [cached_flow_batch(placement, j, j + 1, words, fine)]
-    for s, t, w in skips:
-        parts.append(cached_flow_batch(placement, s, t, w, fine))
-    return analyze(FlowBatch.concat(parts), hw, topology)
+
+# the benchmark harness and the cache registry address this cache through
+# the functools-style accessors the old lru_cache decorator provided
+_pair_traffic.cache_info = _PAIR_TRAFFIC_CACHE.info        # type: ignore[attr-defined]
+_pair_traffic.cache_clear = _PAIR_TRAFFIC_CACHE.clear      # type: ignore[attr-defined]
 
 
 @dataclasses.dataclass
@@ -339,13 +398,12 @@ def _prep_segment(g: Graph, seg: Segment, hw: HWConfig, topology: Topology,
         per_pair_stats = None
         worst = None
     elif engine != "reference":
-        per_pair_stats = [
-            _pair_traffic(org, tuple(pe_alloc), j,
-                          float(pe_alloc[j]) * traffic_scale,
-                          tuple((s, t, vol / max(1, n_bursts[j]))
-                                for s, t, vol in intra_skips if s <= j < t),
-                          hw, topology, fine)
-            for j in range(len(grans))]
+        per_pair_stats = _pair_traffic_sweep(
+            org, tuple(pe_alloc), hw, topology, fine,
+            [(j, float(pe_alloc[j]) * traffic_scale,
+              tuple((s, t, vol / max(1, n_bursts[j]))
+                    for s, t, vol in intra_skips if s <= j < t))
+             for j in range(len(grans))])
         worst = max(per_pair_stats, key=lambda st: st.worst_channel_load)
     else:
         per_pair_stats = []
@@ -591,12 +649,11 @@ def _prep_branch_segment(g: Graph, region: BranchRegion, hw: HWConfig,
         worst = None
     else:
         out_volumes = [op.output_volume() for op in ops]
-        per_edge_stats = [
-            analyze(edge_flow_batch(placement, edges, k, pe_alloc,
-                                    out_volumes, intra_skips,
-                                    traffic_scale, fine),
-                    hw, topology)
-            for k in range(len(edges))]
+        per_edge_stats = analyze_batch(
+            [edge_flow_batch(placement, edges, k, pe_alloc, out_volumes,
+                             intra_skips, traffic_scale, fine)
+             for k in range(len(edges))],
+            hw, topology)
         worst = max(per_edge_stats, key=lambda st: st.worst_channel_load)
 
     return _SegPrep(seg, ops, dfs, grans, pe_alloc, org, placement, worst,
@@ -701,14 +758,23 @@ def _span_signature(g: Graph, seg: Segment) -> Tuple:
     """Everything ``_plan_segment`` reads from a span, by value: op shapes
     and strides, the in-span input wiring (slot-relative; it decides the
     disconnected->GB fallback), intra-span skip pairs, and the
-    boundary-crossing skip volume."""
+    boundary-crossing skip volume.  Memoized per (graph, span): the DP
+    re-signs each span once per org/staging variant."""
+    key = (id(g), seg.start, seg.stop)
+    hit = _SPAN_SIG_CACHE.get(key)
+    if hit is not None and hit[0] is g:
+        return hit[1]
     intra, crossing = _segment_skip_traffic(g, seg)
     ops_sig = tuple(
         (op.kind.value, tuple(sorted(op.dims.items())), op.stride,
          tuple(sorted(g.index(s) - seg.start for s in op.inputs
                       if seg.start <= g.index(s) < seg.stop)))
         for op in g.ops[seg.start:seg.stop])
-    return (ops_sig, tuple(intra), crossing)
+    sig = (ops_sig, tuple(intra), crossing)
+    if len(_SPAN_SIG_CACHE) >= _SPAN_MEMO_MAX:
+        _SPAN_SIG_CACHE.clear()
+    _SPAN_SIG_CACHE[key] = (g, sig)
+    return sig
 
 
 def _rebind_span(plan: SegmentPlan, g: Graph, i: int, j: int) -> SegmentPlan:
@@ -766,16 +832,20 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
         return plan
 
     def prime(spans: Iterable[Tuple[int, int]]) -> None:
-        """Batch-price many spans in one jitted vmap call (jax engine).
+        """Batch-process many spans ahead of the DP walk.
 
-        The numpy engine prices candidates one ``segment_cost`` call at a
-        time, so priming is a no-op there.  For jax, every span not
-        already memoized (or span-content cached) is prepped on the host,
-        materialized as a struct-of-arrays row, and priced in a single
-        ``price_rows`` dispatch — the tentpole's batched inner loop.
-        Shape-identical spans are priced once and rebound.
+        Every span not already memoized (or span-content cached) is
+        prepped back to back, so the whole frontier's NoC analysis runs
+        as consecutive ``analyze_batch`` sweeps over the shared
+        route-incidence tables (span ``[i, j]`` extends ``[i, j-1]``'s
+        pair set, so the sweep is almost all incidence/pair-cache hits).
+        The jax engine additionally materializes each prep as a
+        struct-of-arrays row and prices them all in a single
+        ``price_rows`` dispatch; the numpy engine prices host-side, one
+        ``segment_cost`` per span.  Shape-identical spans are processed
+        once and rebound.
         """
-        if engine != "jax":
+        if engine not in ("jax", "batch"):
             return
         todo: List[Tuple[int, int, Optional[Tuple]]] = []
         first_of_sig: Dict[Tuple, int] = {}
@@ -799,11 +869,14 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
             todo.append((i, j, sig))
         if not todo:
             return
-        m = _jax_model()
         preps = [_prep_segment(g, Segment(i, j), hw, topology, df_fn,
                                None, None, engine=engine)
                  for i, j, _ in todo]
-        costs = m.price_rows([_price_row(p, hw) for p in preps])
+        if engine == "jax":
+            costs = _jax_model().price_rows([_price_row(p, hw)
+                                             for p in preps])
+        else:
+            costs = [_host_cost(p, hw) for p in preps]
         plans: List[SegmentPlan] = []
         for (i, j, sig), prep, cost in zip(todo, preps, costs):
             plan = _finish_segment(prep, cost)
@@ -1261,6 +1334,10 @@ register_strategy("layerbylayer", plan_layer_by_layer, Topology.MESH,
 # (consumed by Planner.cache_info_all; plugins register alongside)
 register_cache("place", lambda: tuple(_cached_place.cache_info()))
 register_cache("pair_traffic", lambda: tuple(_pair_traffic.cache_info()))
+# the route-incidence table cache lives in noc.py, which sits below
+# plan_api in the import DAG — registered here like flow_batch is from
+# the facade module
+register_cache("route_incidence", route_incidence_cache_info)
 
 
 def _jax_price_cache_info() -> Tuple[int, int, Optional[int], int]:

@@ -73,7 +73,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .hwconfig import HWConfig, PAPER_HW
-from .noc import FlowBatch, LRUCache, Topology, placement_key, route
+from .noc import (FlowBatch, LRUCache, Topology, placement_key, route,
+                  route_incidence)
 from .plan_api import DEFAULT_MAX_BURSTS as _DEFAULT_MAX_BURSTS
 from .plan_api import PlanRequest, register_cache as _register_cache
 from .pipeline_model import (gb_port_words_per_cycle, op_compute_cycles,
@@ -203,8 +204,44 @@ def _burst_paths(fb: FlowBatch, hw: HWConfig, topology: Topology):
     FIFO-key sequence flow i traverses — ``route()`` links, with the final
     hop replaced by the destination PE's ingress-port key assigned
     round-robin in flow order (the same adaptive last-hop arbitration the
-    analytical engines model, re-derived independently here).
+    analytical engines model).
+
+    Decoded from the planner's shared ``RouteIncidence`` table (PR 8):
+    route expansion is paid once per coordinate set across the planner
+    and both transports, and per-link loads come from the same bincount
+    accumulation order, so everything stays bit-identical to the scalar
+    walk below (kept as the fallback for zero-word flow sets, whose
+    drops shift the flow-order port arbitration).
     """
+    inc = route_incidence(fb, hw, topology)
+    w = fb.words.astype(np.float64)
+    if not inc.valid_for(w):
+        return _burst_paths_reference(fb, hw, topology)
+    w_kept = w[inc.keep]
+    n = int(w_kept.shape[0])
+    if n == 0:
+        return [], [], {}, 0.0
+    keys = inc.link_keys()
+    step_keys = [keys[i] for i in inc.inv]
+    paths: List[Tuple[object, ...]] = []
+    words = w_kept.tolist()
+    hop_words = 0.0
+    pos = 0
+    for i in range(n):
+        pl = int(inc.path_len[i])
+        paths.append(tuple(step_keys[pos:pos + pl]))
+        pos += pl
+        # sequential per-flow accumulation, replicating the scalar walk's
+        # float order exactly
+        hop_words += words[i] * pl
+    load_arr = np.bincount(inc.inv, weights=w_kept[inc.fidx],
+                           minlength=inc.n_links)
+    loads = dict(zip(keys, load_arr.tolist()))
+    return paths, words, loads, hop_words
+
+
+def _burst_paths_reference(fb: FlowBatch, hw: HWConfig, topology: Topology):
+    """The original scalar path walk (reference + zero-word fallback)."""
     rows, cols = hw.pe_rows, hw.pe_cols
     express = hw.amp_link_len if topology == Topology.AMP else 1
     ingress: Dict[Tuple[int, int], int] = defaultdict(int)
@@ -565,15 +602,22 @@ def simulate_segment(plan: SegmentPlan, hw: HWConfig, topology: Topology,
     ``engine`` selects how the three max-plus scans (emission chain, GB
     port server, drain absorb) execute: ``"numpy"`` (default) keeps the
     in-line closed forms; ``"jax"`` routes them through
-    ``kernels.maxplus_scan`` (Pallas on TPU, ``lax.associative_scan``
-    elsewhere — see docs/engines.md); ``"reference"`` delegates to the
-    scalar ``simulate_reference`` loop.
+    ``kernels.maxplus_scan``; ``"auto"`` resolves the *simulation*
+    engine independently of pricing — jax only when
+    ``kernels.maxplus_scan`` would pick an accelerator engine (TPU/GPU
+    backend or a ``REPRO_MAXPLUS_ENGINE`` jax override), numpy on CPU
+    where the jax dispatch overhead is a measured regression (see
+    docs/engines.md); ``"reference"`` delegates to the scalar
+    ``simulate_reference`` loop.
     """
     if engine == "reference":
         return simulate_reference(plan, hw, topology, max_bursts)
+    if engine == "auto":
+        from ..kernels.maxplus_scan import _resolve_engine
+        engine = "numpy" if _resolve_engine("auto") == "numpy" else "jax"
     if engine not in ("numpy", "jax"):
         raise ValueError(f"unknown simulator engine {engine!r}; "
-                         "one of ('numpy', 'jax', 'reference')")
+                         "one of ('auto', 'numpy', 'jax', 'reference')")
     if engine == "jax":
         from ..kernels.maxplus_scan import maxplus_scan
 

@@ -44,8 +44,22 @@ class Placement:
         return int(self.grid.max()) + 1
 
     def pes_of(self, slot: int) -> np.ndarray:
-        """[(row, col)] coordinates owned by a layer slot."""
-        return np.argwhere(self.grid == slot)
+        """[(row, col)] coordinates owned by a layer slot.
+
+        Memoized per instance (the grid is immutable once placed); the
+        returned array is shared and marked read-only — callers copy
+        before mutating.
+        """
+        memo = self.__dict__.get("_pes_memo")
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_pes_memo", memo)
+        arr = memo.get(slot)
+        if arr is None:
+            arr = np.argwhere(self.grid == slot)
+            arr.setflags(write=False)
+            memo[slot] = arr
+        return arr
 
 
 def allocate_pes(mac_ratios: Sequence[float], num_units: int) -> List[int]:
@@ -140,22 +154,18 @@ def place(org: SpatialOrg, mac_ratios: Sequence[float], hw: HWConfig,
     elif org == SpatialOrg.CHECKERBOARD_2D:
         # PE-granular 2-D interleave: slot = (r + c) mod depth scaled by
         # MAC ratios via repetition counts.
-        alloc = allocate_pes(mac_ratios, rows * cols)
+        alloc = np.asarray(allocate_pes(mac_ratios, rows * cols), np.int64)
         # lay slots down a space-filling (boustrophedon) order so equal-count
-        # slots form a checkerboard-like interleave.
-        seq: List[int] = []
-        counts = list(alloc)
-        while any(c > 0 for c in counts):
-            for slot in range(depth):
-                if counts[slot] > 0:
-                    seq.append(slot)
-                    counts[slot] -= 1
-        k = 0
-        for r in range(rows):
-            cs = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
-            for c in cs:
-                grid[r, c] = seq[k]
-                k += 1
+        # slots form a checkerboard-like interleave.  The round-robin
+        # emission order — round t emits every slot with alloc > t, slots
+        # ascending within a round — is exactly a stable sort of the
+        # (round, slot) pairs, so the whole sequence builds in numpy.
+        slots = np.repeat(np.arange(depth, dtype=np.int64), alloc)
+        rnd = (np.arange(rows * cols, dtype=np.int64)
+               - np.repeat(np.cumsum(alloc) - alloc, alloc))
+        order = np.argsort(rnd * depth + slots, kind="stable")
+        grid = slots[order].astype(np.int32).reshape(rows, cols)
+        grid[1::2, :] = grid[1::2, ::-1].copy()    # boustrophedon rows
     else:
         raise ValueError(org)
 

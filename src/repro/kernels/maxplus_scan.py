@@ -25,7 +25,9 @@ Engines (``maxplus_scan(..., engine=...)``):
     pairs ``(s, u) . (s', u') = (s + s', max(u + s', u'))``.
   * ``"numpy"``  — the same closed form in numpy (no jax dependency).
   * ``"auto"``   — ``REPRO_MAXPLUS_ENGINE`` env override, else pallas on
-    TPU, xla elsewhere; numpy when jax is unavailable.
+    a real accelerator backend (TPU/GPU), numpy otherwise: on CPU the
+    jax engines' dispatch overhead loses to the numpy closed form
+    (docs/engines.md), so simulation resolves independently of pricing.
 
 ``maxplus_scan_reference`` is the scalar loop both parity suites pin the
 engines against.
@@ -172,7 +174,12 @@ def _resolve_engine(engine: str) -> str:
         return env
     if not _HAVE_JAX:
         return "numpy"
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+    # accelerator-only dispatch: on CPU the host round-trips + dispatch
+    # overhead of both jax engines lose to the numpy closed form (a
+    # measured 0.13x on sim_speed_jax — docs/engines.md), so "auto" only
+    # picks a jax engine when a real accelerator backend is attached
+    return ("pallas" if jax.default_backend() in ("tpu", "gpu")
+            else "numpy")
 
 
 def maxplus_scan(u, s, h0: float = -math.inf, engine: str = "auto",

@@ -154,3 +154,27 @@ def test_route_reaches_destination(r, c):
         # path is connected
         for a, b in zip(links, links[1:]):
             assert a[1] == b[0]
+
+
+@given(st.integers(1, 32), st.integers(1, 32), st.integers(0, 64),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_analyze_batch_singleton_property(rows, cols, n, seed):
+    """``analyze_batch([fb]) == analyze(fb)`` bit for bit over arbitrary
+    grids and random placements — the batched engine's core contract."""
+    import numpy as np
+
+    from repro.core.noc import FlowBatch, analyze, analyze_batch
+
+    rng = np.random.default_rng(seed)
+    fb = FlowBatch(
+        np.stack([rng.integers(0, rows, n),
+                  rng.integers(0, cols, n)], axis=1).astype(np.int64),
+        np.stack([rng.integers(0, rows, n),
+                  rng.integers(0, cols, n)], axis=1).astype(np.int64),
+        rng.uniform(0.0, 9.0, n))
+    hw = dataclasses.replace(HW, pe_rows=rows, pe_cols=cols)
+    for topo in (T.MESH, T.AMP, T.TORUS, T.FLATTENED_BUTTERFLY):
+        got = analyze_batch([fb], hw, topo)[0]
+        want = analyze(fb, hw, topo)
+        assert got == want

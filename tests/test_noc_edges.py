@@ -5,6 +5,12 @@ on the corners the planner rarely exercises: zero flows, all-dropped flows
 (zero words / self loops), single-row and single-column substrates (where
 torus wrap, AMP express links and flattened-butterfly row hops all
 degenerate), and the 1x1 grid with no links at all.
+
+The batched engine (``analyze_batch`` over shared ``RouteIncidence``
+tables) is pinned against both: singleton batches must equal ``analyze``
+bit for bit, whole frontiers must match the scalar oracle's link loads,
+and the vectorized multi-set table builder must reproduce the per-set
+builder exactly.
 """
 import dataclasses as dc
 
@@ -13,7 +19,9 @@ import pytest
 
 from repro.core import PAPER_HW
 from repro.core.noc import (Flow, FlowBatch, Topology, analyze,
-                            analyze_reference, topology_link_count)
+                            analyze_batch, analyze_reference,
+                            route_incidence, topology_link_count,
+                            _build_incidence, _build_incidence_batch)
 
 ALL_TOPOLOGIES = list(Topology)
 
@@ -120,6 +128,115 @@ def test_skinny_grid_end_to_end_flow(topology):
         assert st.max_path_hops < hw.pe_cols - 1
     else:
         assert st.max_path_hops == hw.pe_cols - 1
+
+
+# ---------------------------------------------------------------------------
+# batched engine: analyze_batch / RouteIncidence
+# ---------------------------------------------------------------------------
+
+
+def _assert_stats_identical(a, b):
+    """Bit-level equality — the analyze_batch vs analyze contract."""
+    assert a.worst_channel_load == b.worst_channel_load
+    assert a.total_hop_words == b.total_hop_words
+    assert a.total_wire_words == b.total_wire_words
+    assert a.max_path_hops == b.max_path_hops
+    assert a.num_links_used == b.num_links_used
+    assert a.link_count == b.link_count
+
+
+def _random_batch(rng, n, rows, cols, zero_frac=0.0):
+    src = np.stack([rng.integers(0, rows, n),
+                    rng.integers(0, cols, n)], axis=1).astype(np.int64)
+    dst = np.stack([rng.integers(0, rows, n),
+                    rng.integers(0, cols, n)], axis=1).astype(np.int64)
+    words = rng.uniform(0.1, 9.0, n)
+    if zero_frac:
+        words[rng.random(n) < zero_frac] = 0.0
+    return FlowBatch(src, dst, words)
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("hw", [PAPER_HW, ROW_HW, COL_HW, DOT_HW],
+                         ids=["32x32", "1x16", "16x1", "1x1"])
+def test_analyze_batch_singleton_equals_analyze(topology, hw):
+    """``analyze_batch([fb]) == analyze(fb)`` bit for bit over random
+    placements, including zero-word flows (which force the analyze
+    fallback) and empty batches."""
+    rng = np.random.default_rng(11)
+    fbs = [FlowBatch.empty()]
+    for n in (1, 2, 17, 256):
+        fbs.append(_random_batch(rng, n, hw.pe_rows, hw.pe_cols))
+        fbs.append(_random_batch(rng, n, hw.pe_rows, hw.pe_cols,
+                                 zero_frac=0.2))
+    for fb in fbs:
+        _assert_stats_identical(analyze_batch([fb], hw, topology)[0],
+                                analyze(fb, hw, topology))
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+def test_analyze_batch_frontier_matches_reference_loads(topology):
+    """A whole frontier in one call matches the scalar oracle: link loads
+    and hop counts bit-exact, float totals to summation-order tolerance
+    (the pre-existing analyze vs analyze_reference contract)."""
+    rng = np.random.default_rng(23)
+    fbs = [_random_batch(rng, n, PAPER_HW.pe_rows, PAPER_HW.pe_cols)
+           for n in (3, 40, 7, 129, 1, 64)]
+    for st, fb in zip(analyze_batch(fbs, PAPER_HW, topology), fbs):
+        ref = analyze_reference(
+            [Flow(tuple(s), tuple(d), float(w))
+             for s, d, w in zip(fb.src, fb.dst, fb.words)],
+            PAPER_HW, topology)
+        assert st.worst_channel_load == ref.worst_channel_load
+        assert st.max_path_hops == ref.max_path_hops
+        assert st.num_links_used == ref.num_links_used
+        assert st.link_count == ref.link_count
+        np.testing.assert_allclose(st.total_hop_words, ref.total_hop_words,
+                                   rtol=1e-12)
+        np.testing.assert_allclose(st.total_wire_words,
+                                   ref.total_wire_words, rtol=1e-12)
+
+
+def test_torus_wraparound_routes():
+    """Full-span torus flows take the wrap link — one hop, and the
+    incidence table prices the wrap exactly like ``analyze``."""
+    hw = ROW_HW
+    fb = FlowBatch(np.array([[0, 0]], np.int64),
+                   np.array([[0, hw.pe_cols - 1]], np.int64),
+                   np.array([3.0]))
+    st = analyze_batch([fb], hw, Topology.TORUS)[0]
+    _assert_stats_identical(st, analyze(fb, hw, Topology.TORUS))
+    assert st.max_path_hops == 1            # ring closes the span
+    assert st.worst_channel_load == 3.0
+    inc = route_incidence(fb, hw, Topology.TORUS)
+    # the wrap hop is the flow's last, so it lands on the consumer's
+    # first adaptive ingress port rather than a wire link
+    assert inc.link_keys() == [((0, hw.pe_cols - 1), "in", 0)]
+
+
+@pytest.mark.parametrize("topology", ALL_TOPOLOGIES)
+@pytest.mark.parametrize("rows,cols", [(8, 8), (1, 16), (16, 1), (5, 3)],
+                         ids=["8x8", "1x16", "16x1", "5x3"])
+def test_build_incidence_batch_bit_parity(topology, rows, cols):
+    """The multi-set table builder reproduces the per-set builder exactly
+    (every array field, including the per-set sorted link tables)."""
+    rng = np.random.default_rng(3)
+    express = PAPER_HW.amp_link_len if topology == Topology.AMP else 1
+    sets = []
+    for _ in range(17):
+        n = int(rng.integers(0, 33))
+        sets.append((
+            np.stack([rng.integers(0, rows, n),
+                      rng.integers(0, cols, n)], 1).astype(np.int64),
+            np.stack([rng.integers(0, rows, n),
+                      rng.integers(0, cols, n)], 1).astype(np.int64)))
+    batch = _build_incidence_batch(sets, rows, cols, topology, express)
+    for (src, dst), got in zip(sets, batch):
+        want = _build_incidence(src, dst, rows, cols, topology, express)
+        for f in ("keep", "path_len", "fidx", "inv", "wire", "uniq"):
+            assert np.array_equal(getattr(want, f), getattr(got, f)), f
+        assert want.max_path_hops == got.max_path_hops
+        assert want.link_count == got.link_count
 
 
 @pytest.mark.parametrize("hw", [ROW_HW, COL_HW], ids=["1x16", "16x1"])
