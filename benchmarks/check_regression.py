@@ -1,19 +1,28 @@
 """Cold-plan perf regression check for CI's perf-smoke job.
 
-Compares a fresh ``planner_speed`` run against the committed baseline
-``summary.json``: the geometric mean over per-task cold-DP wall-clock
-ratios (fresh ``dp_s`` / baseline ``dp_s``) must not regress by more than
+Compares a fresh benchmark run against the committed baseline
+``summary.json``: the geometric mean over per-task cold-plan wall-clock
+ratios (fresh / baseline) must not regress by more than
 ``--max-regression`` (default 20%).  Geomean — not TOTAL — so one big
 task cannot mask a 10x regression on a small one, and shared-runner
 noise on any single task is damped.
 
   python -m benchmarks.check_regression BASELINE.json FRESH.json \\
+      [--benchmark planner_speed] [--time-key dp_s] \\
       [--max-regression 0.20]
 
+``--benchmark`` selects which summary entry to gate (``planner_speed``
+by default; ``lm_planner_speed`` gates the periodic-folding path with
+``--time-key fold_s``).  A baseline that predates the benchmark — the
+entry is absent or empty — passes as "no baseline" (exit 0): the first
+run to commit a row establishes the baseline, it cannot regress against
+nothing.  A *fresh* run missing the row is still an error (exit 2): the
+benchmark was supposed to run.
+
 Exit codes: 0 ok, 1 regression past the threshold, 2 unusable inputs
-(missing files/rows).  The CI step stays non-blocking (the job is
-``continue-on-error``); the exit code makes the red X visible without
-gating merges on shared-runner wall-clock.
+(missing files/rows in the fresh run).  The CI step stays non-blocking
+(the job is ``continue-on-error``); the exit code makes the red X
+visible without gating merges on shared-runner wall-clock.
 """
 from __future__ import annotations
 
@@ -22,33 +31,61 @@ import json
 import math
 import sys
 from pathlib import Path
+from typing import Optional
+
+#: per-task rows excluded from the geomean (aggregates, sub-metrics)
+_AGGREGATE_TASKS = (None, "TOTAL", "STAGE1", "GEOMEAN")
 
 
-def _dp_times(summary_path: Path) -> dict:
+def _times(summary_path: Path, benchmark: str,
+           key: str) -> Optional[dict]:
+    """Per-task timings, or None if the summary has no such benchmark
+    entry (a baseline from before the benchmark existed)."""
     data = json.loads(summary_path.read_text())
-    rows = data.get("planner_speed", [])
-    return {r["task"]: float(r["dp_s"]) for r in rows
-            if r.get("task") not in (None, "TOTAL", "STAGE1")
-            and "dp_s" in r and float(r.get("dp_s", 0)) > 0}
+    if benchmark not in data:
+        return None
+    rows = data[benchmark]
+    times = {r["task"]: float(r[key]) for r in rows
+             if r.get("task") not in _AGGREGATE_TASKS
+             and key in r and float(r.get(key, 0)) > 0}
+    return times or None
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", type=Path)
     ap.add_argument("fresh", type=Path)
+    ap.add_argument("--benchmark", default="planner_speed",
+                    help="summary.json entry to gate")
+    ap.add_argument("--time-key", default="dp_s",
+                    help="per-task wall-clock field to compare")
     ap.add_argument("--max-regression", type=float, default=0.20,
                     help="allowed geomean slowdown (0.20 = 20%%)")
     args = ap.parse_args()
 
     try:
-        base = _dp_times(args.baseline)
-        fresh = _dp_times(args.fresh)
+        base = _times(args.baseline, args.benchmark, args.time_key)
     except (OSError, json.JSONDecodeError) as e:
-        print(f"check_regression: unusable input: {e}", file=sys.stderr)
+        print(f"check_regression: unusable baseline: {e}", file=sys.stderr)
+        return 2
+    try:
+        fresh = _times(args.fresh, args.benchmark, args.time_key)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: unusable fresh run: {e}", file=sys.stderr)
+        return 2
+    if base is None:
+        # the committed baseline predates this benchmark: nothing to
+        # regress against — the fresh run establishes the baseline
+        print(f"check_regression: no baseline for {args.benchmark!r} "
+              f"— passing (fresh run establishes it)")
+        return 0
+    if fresh is None:
+        print(f"check_regression: fresh run has no {args.benchmark!r} "
+              f"rows", file=sys.stderr)
         return 2
     common = sorted(set(base) & set(fresh))
     if not common:
-        print("check_regression: no common planner_speed tasks",
+        print(f"check_regression: no common {args.benchmark} tasks",
               file=sys.stderr)
         return 2
 
@@ -56,15 +93,15 @@ def main() -> int:
     for task in common:
         ratio = fresh[task] / base[task]
         logs.append(math.log(ratio))
-        print(f"{task:24s} baseline {base[task]:8.4f}s  "
+        print(f"{task:40s} baseline {base[task]:8.4f}s  "
               f"fresh {fresh[task]:8.4f}s  ratio {ratio:5.2f}x")
     gm = math.exp(sum(logs) / len(logs))
     limit = 1.0 + args.max_regression
-    print(f"geomean dp_s ratio: {gm:.3f}x (limit {limit:.2f}x, "
+    print(f"geomean {args.time_key} ratio: {gm:.3f}x (limit {limit:.2f}x, "
           f"{len(common)} tasks)")
     if gm > limit:
-        print(f"check_regression: cold-plan DP regressed {gm:.2f}x > "
-              f"{limit:.2f}x", file=sys.stderr)
+        print(f"check_regression: {args.benchmark} cold-plan regressed "
+              f"{gm:.2f}x > {limit:.2f}x", file=sys.stderr)
         return 1
     return 0
 

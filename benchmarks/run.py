@@ -53,6 +53,11 @@ def _derived(name: str, rows) -> str:
         if name == "planner_speed":
             tot = [r for r in rows if r.get("task") == "TOTAL"][0]
             return f"dp_speedup_vs_reference={tot['speedup']}"
+        if name == "lm_planner_speed":
+            tot = [r for r in rows if r.get("task") == "TOTAL"][0]
+            return (f"geomean_fold_speedup={tot['geomean_fold_speedup']};"
+                    f"shelf_dp_solves={tot['shelf_dp_solves']};"
+                    f"identical={tot['plans_identical']}")
         if name == "plan_profile":
             tot = [r for r in rows if r.get("task") == "TOTAL"][0]
             return (f"noc_pct={tot['noc_pct']};"

@@ -767,6 +767,125 @@ def multi_tenant() -> List[dict]:
     return rows
 
 
+def lm_planner_speed() -> List[dict]:
+    """Periodic-structure plan folding + the span shelf on the LM zoo.
+
+    For every LM serving graph (decode step + prefill buckets, all archs
+    >= 24 blocks): cold ``plan_pipeorgan`` wall-clock folded vs unfolded
+    (every cross-call cache dropped both times, so the fold column pays
+    periodicity detection and signature hashing for real), a
+    ``plan_diffs`` identity check (folding is a pure speed knob), and the
+    shelf-warm path — replanning with a warm ``SpanShelf`` but a cold
+    memory tier must invoke the DP segment solver ZERO times
+    (``shelf_dp_solves``).  The TOTAL row carries the geomean fold
+    speedup the perf-smoke gate tracks.
+    """
+    import tempfile
+
+    import repro.core.planner as planner_mod
+    from repro.configs import ARCHS, get_config
+    from repro.configs.lm_graphs import lm_graphs
+    from repro.core import (SpanShelf, plan_diffs, plan_pipeorgan,
+                            set_span_shelf, span_cache_clear)
+
+    def _cold():
+        planner_mod._pair_traffic.cache_clear()
+        planner_mod._cached_place.cache_clear()
+        planner_mod._SPAN_SIG_CACHE.clear()
+        planner_mod._FOLD_SIG_CACHE.clear()
+        span_cache_clear()
+        noc_mod.flow_batch_cache_clear()
+        noc_mod.route_incidence_cache_clear()
+
+    cfgs = [get_config(a) for a in ARCHS]
+
+    def _blocks(graph_name: str) -> int:
+        cfg = next(c for c in cfgs if graph_name.startswith(c.name))
+        if cfg.arch_kind == "encdec" and "prefill" in graph_name:
+            return cfg.n_enc_layers
+        return cfg.n_layers
+
+    orig_plan_seg = planner_mod._plan_segment
+    orig_prep_seg = planner_mod._prep_segment
+    solves = [0]
+
+    def counting_plan(*a, **k):
+        solves[0] += 1
+        return orig_plan_seg(*a, **k)
+
+    def counting_prep(*a, **k):
+        solves[0] += 1
+        return orig_prep_seg(*a, **k)
+
+    rows = []
+    logs = []
+    t_fold_total = t_unfold_total = t_warm_total = 0.0
+    all_identical = True
+    total_dp_solves = 0
+    try:
+        with tempfile.TemporaryDirectory() as shelf_dir:
+            for name, g in sorted(lm_graphs().items()):
+                _cold()
+                t0 = time.perf_counter()
+                unfolded = plan_pipeorgan(g, PAPER_HW, Topology.AMP,
+                                          fold=False)
+                t_unfold = time.perf_counter() - t0
+                _cold()
+                t0 = time.perf_counter()
+                folded = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+                t_fold = time.perf_counter() - t0
+                identical = not plan_diffs(folded, unfolded)
+                all_identical &= identical
+                # shelf-warm: populate cold, then replan with the memory
+                # tier dropped — zero DP segment solves expected
+                set_span_shelf(SpanShelf(shelf_dir))
+                _cold()
+                plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+                _cold()
+                planner_mod._plan_segment = counting_plan
+                planner_mod._prep_segment = counting_prep
+                solves[0] = 0
+                t0 = time.perf_counter()
+                warm = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+                t_warm = time.perf_counter() - t0
+                planner_mod._plan_segment = orig_plan_seg
+                planner_mod._prep_segment = orig_prep_seg
+                set_span_shelf(None)
+                warm_identical = not plan_diffs(folded, warm)
+                all_identical &= warm_identical
+                total_dp_solves += solves[0]
+                t_fold_total += t_fold
+                t_unfold_total += t_unfold
+                t_warm_total += t_warm
+                speedup = t_unfold / t_fold
+                logs.append(math.log(speedup))
+                rows.append({
+                    "task": name, "n_ops": len(g.ops),
+                    "blocks": _blocks(name),
+                    "unfold_s": round(t_unfold, 4),
+                    "fold_s": round(t_fold, 4),
+                    "fold_speedup": round(speedup, 2),
+                    "shelf_warm_s": round(t_warm, 4),
+                    "shelf_dp_solves": solves[0],
+                    "plans_identical": identical and warm_identical,
+                })
+    finally:
+        planner_mod._plan_segment = orig_plan_seg
+        planner_mod._prep_segment = orig_prep_seg
+        set_span_shelf(None)
+    rows.append({
+        "task": "TOTAL",
+        "unfold_s": round(t_unfold_total, 3),
+        "fold_s": round(t_fold_total, 3),
+        "fold_speedup": round(t_unfold_total / t_fold_total, 2),
+        "geomean_fold_speedup": round(math.exp(sum(logs) / len(logs)), 2),
+        "shelf_warm_s": round(t_warm_total, 3),
+        "shelf_dp_solves": total_dp_solves,
+        "plans_identical": all_identical,
+    })
+    return rows
+
+
 FIGURES = {
     "fig05_aw_ratios": fig05_aw_ratios,
     "fig06_skips": fig06_skips,
@@ -780,6 +899,7 @@ FIGURES = {
     "amp_ablation": amp_ablation,
     "simulator_validation": simulator_validation,
     "planner_speed": planner_speed,
+    "lm_planner_speed": lm_planner_speed,
     "plan_profile": plan_profile,
     "planner_speed_jax": planner_speed_jax,
     "sim_speed": sim_speed,

@@ -11,7 +11,7 @@ import sys
 
 from repro.configs.xrbench import all_tasks
 from repro.core import (LATENCY_BAND, PAPER_HW, PlanRequest, Topology,
-                        get_planner)
+                        get_planner, get_span_shelf, span_cache_info)
 
 task = sys.argv[1] if len(sys.argv) > 1 else "keyword_spotting"
 g = all_tasks()[task]
@@ -48,3 +48,18 @@ for name, ci in planner.cache_info_all().items():
     cap = "unbounded" if ci.maxsize is None else str(ci.maxsize)
     print(f"  {name:>12s}: {hits:6d} hits  {misses:6d} misses  "
           f"{size:>5s}/{cap} entries")
+
+# the DP span cache is two-tier: an in-memory LRU backed by an optional
+# on-disk SpanShelf (install one with Planner(span_shelf=...) — see
+# docs/planner.md); report both tiers explicitly
+mem_hits, mem_misses, _, mem_size = span_cache_info()
+print(f"\nspan tiers: memory {mem_hits} hits / {mem_misses} misses "
+      f"({mem_size} spans resident)")
+shelf = get_span_shelf()
+if shelf is None:
+    print("            shelf  not installed (cold planning solves every "
+          "unique span)")
+else:
+    s_hits, s_misses, _, s_size = shelf.info()
+    print(f"            shelf  {s_hits} hits / {s_misses} misses "
+          f"({s_size} spans at {shelf.root})")

@@ -24,9 +24,9 @@ Stage 2 — HW mapping and NoC architecture:
 from .dataflow import Dataflow, choose_dataflow, best_case_arithmetic_intensity
 from .depth import Segment, SkipIndex, segment_depths, segment_graph
 from .granularity import Granularity, finest_granularity
-from .graph import (BranchRegion, Graph, Op, OpKind, SPBlock, add,
-                    branch_regions, chain, concat, conv, dwconv, gemm,
-                    series_parallel_decomposition)
+from .graph import (BranchRegion, Graph, Op, OpKind, PeriodicRun, SPBlock,
+                    add, attend, branch_regions, chain, concat, conv, dwconv,
+                    gemm, periodic_regions, series_parallel_decomposition)
 from .hwconfig import HWConfig, PAPER_HW, TPU_V5E
 from .noc import (Flow, FlowBatch, Topology, TrafficStats, analyze,
                   analyze_reference, cached_flow_batch, flow_batch_cache_clear,
@@ -41,12 +41,14 @@ from .plan_api import (Constraint, DEFAULT_OBJECTIVE, METRICS, Objective,
                        register_strategy, strategy_names, unregister_cache,
                        unregister_strategy)
 from .planner import (PlanResult, SegmentPlan, STRATEGIES, edges_on_path,
-                      plan_layer_by_layer, plan_pipeorgan,
+                      get_span_shelf, plan_layer_by_layer, plan_pipeorgan,
                       plan_pipeorgan_linear, plan_pipeorgan_reference,
                       plan_pipeorgan_uniform, plan_simba_like,
-                      plan_tangram_like)
-from .artifact import (PLAN_SCHEMA_VERSION, PlanArtifact, PlanSchemaError,
-                       PlanStore, plan_diffs, plan_from_dict, plan_to_dict)
+                      plan_tangram_like, set_span_shelf, span_cache_clear,
+                      span_cache_info)
+from .artifact import (PLAN_SCHEMA_VERSION, SPAN_SCHEMA_VERSION, PlanArtifact,
+                       PlanSchemaError, PlanStore, SpanShelf, plan_diffs,
+                       plan_from_dict, plan_to_dict)
 from .planner_service import CacheInfo, Planner, get_planner
 from .simulator import (DEFAULT_MAX_BURSTS, LATENCY_BAND,
                         LATENCY_BAND_UNCONGESTED, SimReport, SegmentSimReport,
@@ -66,9 +68,9 @@ __all__ = [
     "Dataflow", "choose_dataflow", "best_case_arithmetic_intensity",
     "Segment", "SkipIndex", "segment_depths", "segment_graph",
     "Granularity", "finest_granularity",
-    "BranchRegion", "Graph", "Op", "OpKind", "SPBlock", "add",
-    "branch_regions", "chain", "concat", "conv", "dwconv", "gemm",
-    "series_parallel_decomposition",
+    "BranchRegion", "Graph", "Op", "OpKind", "PeriodicRun", "SPBlock", "add",
+    "attend", "branch_regions", "chain", "concat", "conv", "dwconv", "gemm",
+    "periodic_regions", "series_parallel_decomposition",
     "HWConfig", "PAPER_HW", "TPU_V5E",
     "Flow", "FlowBatch", "Topology", "TrafficStats", "analyze",
     "analyze_reference", "cached_flow_batch", "flow_batch_cache_clear",
@@ -81,12 +83,14 @@ __all__ = [
     "cache_registry", "get_strategy", "latency_first", "min_dram",
     "min_energy", "register_cache", "register_strategy", "strategy_names",
     "unregister_cache", "unregister_strategy",
-    "PLAN_SCHEMA_VERSION", "PlanArtifact", "PlanSchemaError", "PlanStore",
+    "PLAN_SCHEMA_VERSION", "SPAN_SCHEMA_VERSION", "PlanArtifact",
+    "PlanSchemaError", "PlanStore", "SpanShelf",
     "plan_diffs", "plan_from_dict", "plan_to_dict",
     "PlanResult", "SegmentPlan", "STRATEGIES", "edges_on_path",
-    "plan_layer_by_layer", "plan_pipeorgan", "plan_pipeorgan_linear",
-    "plan_pipeorgan_reference", "plan_pipeorgan_uniform", "plan_simba_like",
-    "plan_tangram_like",
+    "get_span_shelf", "plan_layer_by_layer", "plan_pipeorgan",
+    "plan_pipeorgan_linear", "plan_pipeorgan_reference",
+    "plan_pipeorgan_uniform", "plan_simba_like", "plan_tangram_like",
+    "set_span_shelf", "span_cache_clear", "span_cache_info",
     "CacheInfo", "Planner", "get_planner", "graph_fingerprint",
     "DEFAULT_MAX_BURSTS", "LATENCY_BAND", "LATENCY_BAND_UNCONGESTED",
     "SimReport", "SegmentSimReport", "SegmentValidation", "ValidationReport",

@@ -377,3 +377,74 @@ class PlanStore:
     def info(self) -> Tuple[int, int, int, int]:
         """(hits, misses, maxsize, currsize); maxsize 0 = unbounded."""
         return (self.hits, self.misses, 0, len(self))
+
+
+# ---------------------------------------------------------------------------
+# the span shelf
+# ---------------------------------------------------------------------------
+
+#: bump on any change to the shelved span layout (it reuses the
+#: ``SegmentPlan`` codec, so a ``PLAN_SCHEMA_VERSION`` bump implies one
+#: here too); mismatches read as misses, never as errors — a stale shelf
+#: must only cost a re-solve.
+SPAN_SCHEMA_VERSION = 1
+
+SPAN_KIND = "pipeorgan-span"
+
+
+class SpanShelf:
+    """A directory of solved DP spans, content-addressed by span token.
+
+    The persistent tier behind the planner's in-memory span cache
+    (``planner.set_span_shelf``): one small JSON file per solved span,
+    keyed by the sha256 token of (span signature, hardware, topology,
+    engine, DP family).  Same content -> same token -> idempotent
+    overwrites, so any number of serve engines may share one shelf
+    directory — writes are atomic (unique tmp + ``os.replace``) and a
+    reader never sees a half-written file.  Stale or foreign files
+    (wrong kind, schema, or token) read as misses, never as errors.
+    """
+
+    SUFFIX = ".span.json"
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.saves = 0
+
+    def path_for(self, token: str) -> Path:
+        return self.root / f"{token}{self.SUFFIX}"
+
+    def save(self, token: str, plan: SegmentPlan) -> Path:
+        self.saves += 1
+        path = self.path_for(token)
+        doc = {"kind": SPAN_KIND, "schema_version": SPAN_SCHEMA_VERSION,
+               "token": token, "plan": _segment_plan_to_dict(plan)}
+        tmp = path.with_suffix(f".{os.getpid()}.tmp")
+        tmp.write_text(json.dumps(doc, sort_keys=True) + "\n")
+        os.replace(tmp, path)
+        return path
+
+    def load(self, token: str) -> Optional[SegmentPlan]:
+        path = self.path_for(token)
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, ValueError):
+            self.misses += 1
+            return None
+        if (doc.get("kind") != SPAN_KIND
+                or doc.get("schema_version") != SPAN_SCHEMA_VERSION
+                or doc.get("token") != token):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return _segment_plan_from_dict(doc["plan"])
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob(f"*{self.SUFFIX}"))
+
+    def info(self) -> Tuple[int, int, int, int]:
+        """(hits, misses, maxsize, currsize); maxsize 0 = unbounded."""
+        return (self.hits, self.misses, 0, len(self))

@@ -18,6 +18,7 @@ whether the interval is executed as a chain or as co-placed branches).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 from typing import List, Optional, Tuple
@@ -53,6 +54,12 @@ class Segment:
     def __contains__(self, idx: int) -> bool:
         return self.start <= idx < self.stop
 
+    def translate(self, delta: int) -> "Segment":
+        """This segment shifted by ``delta`` op slots.  ``branches`` are
+        segment-relative, so they carry over unchanged — the shape of the
+        plan-folding tile step (plan one period, translate the rest)."""
+        return Segment(self.start + delta, self.stop + delta, self.branches)
+
     def spans_from(self, i: int, max_span: int) -> range:
         """Valid end points j for a sub-segment [i, j) of this segment.
 
@@ -80,6 +87,16 @@ class SkipIndex:
     def __init__(self, g: Graph):
         self.edges = g.skip_edges()                 # one O(ops) walk, total
         self.vols = [g.ops[p].output_volume() for p, c in self.edges]
+        # presorted views so each sweep() is a bisect + slice, not a sort:
+        # the greedy heuristic opens one sweep per segment start, and
+        # re-sorting the full edge list every time dominated segmentation
+        # cost on deep periodic stacks
+        pcv = sorted((p, c, v)
+                     for (p, c), v in zip(self.edges, self.vols))
+        self._by_p = pcv                            # sorted by producer
+        self._p_keys = [p for p, _, _ in pcv]
+        self._by_c = sorted(pcv, key=lambda t: t[1])  # sorted by consumer
+        self._c_keys = [c for _, c, _ in self._by_c]
 
     def crossing(self, start: int, stop: int) -> int:
         """Total producer volume of skip edges with exactly one endpoint
@@ -101,27 +118,34 @@ class SkipIndex:
         """
         # type-A edges (p < start <= c): enter when stop passes c
         # type-B edges (start <= p): enter when stop passes p, leave when
-        # stop passes c
-        pcv = [(p, c, v) for (p, c), v in zip(self.edges, self.vols)]
-        a_events = sorted((c, v) for p, c, v in pcv if p < start <= c)
-        b_edges = sorted((p, c, v) for p, c, v in pcv if p >= start)
-        state = {"ai": 0, "bi": 0, "acc": 0, "open": []}
+        # stop passes c.  Both lists come from the presorted views: the
+        # consumer-sorted suffix c >= start (filtered to p < start) is
+        # already in c-order, and the producer-sorted suffix p >= start is
+        # already in p-order.
+        a_events = [(c, v)
+                    for p, c, v in self._by_c[
+                        bisect.bisect_left(self._c_keys, start):]
+                    if p < start]
+        b_edges = self._by_p
+        bi = bisect.bisect_left(self._p_keys, start)
+        ai = 0
+        acc = 0
+        open_heap: List[Tuple[int, int]] = []
 
         def crossing_at(stop: int) -> int:
-            while state["ai"] < len(a_events) and \
-                    a_events[state["ai"]][0] < stop:
-                state["acc"] += a_events[state["ai"]][1]
-                state["ai"] += 1
-            while state["bi"] < len(b_edges) and \
-                    b_edges[state["bi"]][0] < stop:
-                p, c, v = b_edges[state["bi"]]
-                state["acc"] += v
-                heapq.heappush(state["open"], (c, v))
-                state["bi"] += 1
-            while state["open"] and state["open"][0][0] < stop:
-                _, v = heapq.heappop(state["open"])
-                state["acc"] -= v
-            return state["acc"]
+            nonlocal ai, bi, acc
+            while ai < len(a_events) and a_events[ai][0] < stop:
+                acc += a_events[ai][1]
+                ai += 1
+            while bi < len(b_edges) and b_edges[bi][0] < stop:
+                p, c, v = b_edges[bi]
+                acc += v
+                heapq.heappush(open_heap, (c, v))
+                bi += 1
+            while open_heap and open_heap[0][0] < stop:
+                _, v = heapq.heappop(open_heap)
+                acc -= v
+            return acc
 
         return crossing_at
 

@@ -16,6 +16,8 @@ import enum
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 class OpKind(enum.Enum):
     CONV = "conv"          # O[n,p,q,k] += I[n,p+r,q+s,c] * W[r,s,c,k]
@@ -27,15 +29,25 @@ class OpKind(enum.Enum):
     ROIALIGN = "roialign"  # complex layer -> pipeline cut (Sec. IV-A)
     UPSAMPLE = "upsample"  # nearest/bilinear upsample, no weights
     GLOBALPOOL = "globalpool"
+    ATTEND = "attend"      # LM token mixer (attention / recurrent scan):
+    #                        weightless, reads a resident state (KV cache /
+    #                        recurrence state); complex -> pipeline cut,
+    #                        like ROIAlign (softmax / the sequential scan
+    #                        breaks the producer->consumer stream).
+    #                        dims {N,H,W,C} are the output (N query
+    #                        streams x H tokens x C head dim) plus S (state
+    #                        length: KV context / state width) and G (the
+    #                        number of distinct state streams, e.g.
+    #                        batch x kv-heads under GQA; defaults to N).
 
 
 #: kinds at which the depth heuristic must cut the pipeline segment.
-COMPLEX_KINDS = frozenset({OpKind.ROIALIGN})
+COMPLEX_KINDS = frozenset({OpKind.ROIALIGN, OpKind.ATTEND})
 
 #: kinds that carry no weights (pure data movers / reductions).
 WEIGHTLESS_KINDS = frozenset(
     {OpKind.POOL, OpKind.ADD, OpKind.CONCAT, OpKind.UPSAMPLE,
-     OpKind.GLOBALPOOL, OpKind.ROIALIGN}
+     OpKind.GLOBALPOOL, OpKind.ROIALIGN, OpKind.ATTEND}
 )
 
 
@@ -91,7 +103,7 @@ class Op:
             return d["N"] * d["C"]
         if self.kind == OpKind.GEMM:
             return d["M"] * d["N"]
-        if self.kind == OpKind.ROIALIGN:
+        if self.kind in (OpKind.ROIALIGN, OpKind.ATTEND):
             return d["N"] * d["H"] * d["W"] * d["C"]
         raise ValueError(self.kind)
 
@@ -112,6 +124,12 @@ class Op:
             return d["N"] * d["H"] * d["W"] * d["C"]
         if self.kind == OpKind.ROIALIGN:
             return d["N"] * d["H"] * d["W"] * d["C"]
+        if self.kind == OpKind.ATTEND:
+            # the fresh queries plus the resident state swept per step
+            # (G streams of S x C each, read and combined: K and V halves
+            # of a KV cache, or the recurrence state matrix)
+            return (self.output_volume()
+                    + 2 * d.get("G", d["N"]) * d.get("S", 1) * d["C"])
         raise ValueError(self.kind)
 
     def macs(self) -> int:
@@ -122,6 +140,10 @@ class Op:
             return d["N"] * d["H"] * d["W"] * d["C"] * d["R"] * d["S"]
         if self.kind == OpKind.GEMM:
             return d["M"] * d["N"] * d["K"]
+        if self.kind == OpKind.ATTEND:
+            # QK^T + AV (or the equivalent scan update): 2 passes over the
+            # state per query token
+            return 2 * d["N"] * d["H"] * d["W"] * d.get("S", 1) * d["C"]
         # weightless ops: one "mac" per output element (cheap, keeps the
         # load-balancer from dividing by zero)
         return self.output_volume()
@@ -172,6 +194,10 @@ class Graph:
         self._index = {op.name: i for i, op in enumerate(self.ops)}
         if len(self._index) != len(self.ops):
             raise ValueError(f"duplicate op names in graph {self.name}")
+        # consumer adjacency, built once: ``consumers`` used to rescan the
+        # whole op list per call, which is O(ops) on a hot analysis path
+        self._consumers: Dict[str, List[int]] = {op.name: []
+                                                 for op in self.ops}
         for op in self.ops:
             for src in op.inputs:
                 if src not in self._index:
@@ -180,6 +206,9 @@ class Graph:
                     raise ValueError(
                         f"graph {self.name} not topologically ordered: "
                         f"{op.name} <- {src}")
+                ci = self._index[op.name]
+                if ci not in self._consumers[src]:
+                    self._consumers[src].append(ci)
 
     def index(self, name: str) -> int:
         return self._index[name]
@@ -188,7 +217,11 @@ class Graph:
         return self.ops[self._index[name]]
 
     def consumers(self, name: str) -> List[Op]:
-        return [o for o in self.ops if name in o.inputs]
+        """Ops consuming ``name``'s output, in topological order (the
+        adjacency map is prebuilt in ``__post_init__``; behavior is pinned
+        against the naive scan by an equivalence test).  Unknown names
+        yield ``[]``, exactly like the scan did."""
+        return [self.ops[i] for i in self._consumers.get(name, ())]
 
     # ---- skip-connection census (Fig. 6) ------------------------------------
     def skip_edges(self) -> List[Tuple[int, int]]:
@@ -216,6 +249,118 @@ class Graph:
 
     def total_weights(self) -> int:
         return sum(op.weight_volume() for op in self.ops)
+
+    # ---- structural digests (periodicity detection) -------------------------
+    def op_digest(self, i: int) -> Tuple:
+        """Structural digest of ``ops[i]``: everything the planner's span
+        signature reads from one op, by value and *modulo slot offset* —
+        kind, dims, stride, and the input wiring as relative offsets
+        (``i - producer_index``).  Two ops with equal digests are
+        interchangeable up to translation: same shapes, same strides, same
+        producers at the same relative distances."""
+        digests = self._op_digests()
+        return digests[i]
+
+    def _op_digests(self) -> List[Tuple]:
+        cached = self.__dict__.get("_op_digest_memo")
+        if cached is not None and len(cached) == len(self.ops):
+            return cached
+        out = [
+            (op.kind.value, tuple(sorted(op.dims.items())), op.stride,
+             tuple(sorted(i - self._index[s] for s in op.inputs)))
+            for i, op in enumerate(self.ops)]
+        self.__dict__["_op_digest_memo"] = out
+        return out
+
+    def max_reuse_distance(self) -> int:
+        """Longest producer->consumer index distance over *all* edges
+        (direct and skip); 1 for a pure chain, 0 for an edgeless graph.
+        Bounds how far an op's wiring environment reaches — the safety
+        margin for periodic-run interior reasoning."""
+        dist = 0
+        for op in self.ops:
+            ci = self._index[op.name]
+            for src in op.inputs:
+                dist = max(dist, ci - self._index[src])
+        return dist
+
+
+# ---------------------------------------------------------------------------
+# Periodicity detection: maximal runs of isomorphic blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicRun:
+    """A maximal run of isomorphic blocks: ``ops[start : start +
+    period*count)`` consists of ``count`` consecutive blocks of ``period``
+    ops whose structural digests (``Graph.op_digest``) repeat exactly —
+    same shapes/strides/wiring modulo slot offset.  The repeated-layer
+    shape of LM stacks."""
+
+    start: int
+    period: int
+    count: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.period * self.count
+
+    def __contains__(self, idx: int) -> bool:
+        return self.start <= idx < self.stop
+
+
+def periodic_regions(g: Graph, min_count: int = 2,
+                     max_period: Optional[int] = None) -> List[PeriodicRun]:
+    """Maximal periodic runs of ``g``'s op sequence, by structural digest.
+
+    Scans periods in increasing order and keeps, for each position, the
+    smallest-period maximal run covering it (a run wholly inside an
+    already-kept run is subsumed — e.g. period 2p repeats inside a period-p
+    run).  Runs are cropped to whole blocks, never overlap, and are
+    returned sorted by ``start``.  O(n * max_period) digest-id
+    comparisons; digests are interned to ints first.
+    """
+    n = len(g.ops)
+    if n == 0:
+        return []
+    intern: Dict[Tuple, int] = {}
+    ids = np.asarray(
+        [intern.setdefault(d, len(intern)) for d in g._op_digests()],
+        dtype=np.int64)
+    if max_period is None:
+        max_period = n // max(2, min_count)
+    runs: List[PeriodicRun] = []
+
+    def covered(a: int, b: int) -> bool:
+        return any(r.start <= a and b <= r.stop for r in runs)
+
+    for period in range(1, max_period + 1):
+        # eq[i] <=> ids[i] == ids[i + period]; maximal True runs [a, b)
+        # are the periodic stretches (digests periodic over [a, b+period))
+        eq = (ids[:-period] == ids[period:]).view(np.int8)
+        if not eq.any():
+            continue
+        step = np.diff(eq)
+        starts = np.flatnonzero(step == 1) + 1
+        ends = np.flatnonzero(step == -1) + 1
+        if eq[0]:
+            starts = np.concatenate(([0], starts))
+        if eq[-1]:
+            ends = np.concatenate((ends, [len(eq)]))
+        for a, b in zip(starts.tolist(), ends.tolist()):
+            count = (b + period - a) // period  # crop to whole blocks
+            if count >= min_count and not covered(a, a + period * count):
+                runs.append(PeriodicRun(a, period, count))
+    runs.sort(key=lambda r: (r.start, r.period))
+    # drop overlaps, preferring earlier starts then smaller periods
+    out: List[PeriodicRun] = []
+    last_stop = 0
+    for r in runs:
+        if r.start >= last_stop:
+            out.append(r)
+            last_stop = r.stop
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -432,3 +577,16 @@ def concat(name: str, n: int, h: int, w: int, c_total: int,
            inputs: Tuple[str, ...] = ()) -> Op:
     return Op(name, OpKind.CONCAT, dict(N=n, H=h, W=w, C=c_total),
               inputs=inputs)
+
+
+def attend(name: str, n: int, h: int, c: int, s: int = 1,
+           g: Optional[int] = None,
+           inputs: Tuple[str, ...] = ()) -> Op:
+    """LM token mixer: ``n`` query streams (batch x heads) of ``h`` tokens
+    with head dim ``c``, mixing against a resident state of length ``s``
+    (KV context for attention, 1 for a recurrent scan) shared across
+    ``g`` state streams (batch x kv-heads under GQA; defaults to ``n``)."""
+    dims = dict(N=n, H=h, W=1, C=c, S=s)
+    if g is not None:
+        dims["G"] = g
+    return Op(name, OpKind.ATTEND, dims, inputs=inputs)

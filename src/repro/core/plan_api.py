@@ -488,14 +488,24 @@ class PlanRequest:
     def cache_token(self) -> str:
         """Content hash of the request identity — the ``PlanStore`` file
         key, stable across processes (unlike ``hash()``)."""
-        blob = json.dumps(self.to_json_dict(), sort_keys=True,
-                          separators=(",", ":"))
-        return hashlib.sha256(blob.encode()).hexdigest()
+        return content_token(self.to_json_dict())
+
+
+def content_token(doc) -> str:
+    """Cross-process content address of any JSON-able document (tuples
+    allowed — canonicalized to lists): sha256 of the canonical JSON.
+    The one hashing rule shared by every on-disk cache key (the
+    ``PlanStore``'s request tokens, the span shelf's span tokens)."""
+    blob = json.dumps(_jsonable(doc), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
 
 
 def _jsonable(obj):
-    if isinstance(obj, tuple):
+    if isinstance(obj, (tuple, list)):
         return [_jsonable(x) for x in obj]
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
     return obj
 
 

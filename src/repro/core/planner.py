@@ -37,10 +37,10 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 from .dataflow import Dataflow, choose_dataflow
 from .depth import Segment, segment_graph
 from .plan_api import (Constraint, DEFAULT_OBJECTIVE, Objective,
-                       jax_engine_available, register_cache,
-                       register_strategy)
+                       content_token, jax_engine_available, register_cache,
+                       register_strategy, unregister_cache)
 from .graph import (BranchRegion, COMPLEX_KINDS, Graph, Op, OpKind,
-                    branch_regions)
+                    branch_regions, periodic_regions)
 from .granularity import Granularity, finest_granularity
 from .hwconfig import HWConfig
 from .noc import (FlowBatch, LRUCache, Topology, TrafficStats,
@@ -749,9 +749,90 @@ def _pipeorgan_df_fn(op: Op, hw: HWConfig, i: int, budget: int) -> Dataflow:
 
 #: content-addressed span plans: same-shape layer runs (repeated conv
 #: blocks, re-planned tasks) plan identically, wherever they sit in a graph.
+#: This is the *memory tier*; ``set_span_shelf`` adds a persistent
+#: on-disk tier behind it (``artifact.SpanShelf``) so a fleet of serve
+#: engines cold-missing into the DP reuses each other's solved spans.
 _SPAN_CACHE_MAX = 65536
 _span_plan_cache: "collections.OrderedDict[Tuple, SegmentPlan]" = \
     collections.OrderedDict()
+_span_mem_stats = {"hits": 0, "misses": 0}
+
+#: the installed persistent span tier (an ``artifact.SpanShelf``), or None
+_span_shelf = None
+
+
+def span_cache_info() -> Tuple[int, int, int, int]:
+    """(hits, misses, maxsize, currsize) of the memory span tier."""
+    return (_span_mem_stats["hits"], _span_mem_stats["misses"],
+            _SPAN_CACHE_MAX, len(_span_plan_cache))
+
+
+def span_cache_clear() -> None:
+    """Drop the memory span tier and its counters (the shelf, if any, is
+    untouched — clearing memory is how the shelf-warm path is exercised)."""
+    _span_plan_cache.clear()
+    _span_mem_stats["hits"] = 0
+    _span_mem_stats["misses"] = 0
+
+
+def set_span_shelf(shelf) -> None:
+    """Install (``artifact.SpanShelf``) or remove (``None``) the
+    persistent span tier.  Installed, every span-cache memory miss
+    consults the shelf before solving, and every freshly solved span is
+    shelved; the shelf's hit/miss counters appear in
+    ``Planner.cache_info_all()`` as ``span_shelf`` while installed."""
+    global _span_shelf
+    _span_shelf = shelf
+    if shelf is None:
+        unregister_cache("span_shelf")
+    else:
+        register_cache("span_shelf", shelf.info, overwrite=True)
+
+
+def get_span_shelf():
+    """The installed persistent span tier, or ``None``."""
+    return _span_shelf
+
+
+#: strategy family baked into every shelf token: shelved spans are DP
+#: sub-segment solutions, shared by all pipeorgan DP variants (which is
+#: sound — they price spans identically — but must never collide with a
+#: future strategy family solving spans differently).
+_SPAN_TOKEN_FAMILY = "pipeorgan-dp"
+
+
+def _span_token(sig: Tuple) -> str:
+    """Cross-process content address of one span-cache key: the span
+    signature plus everything else the solved plan depends on (hardware,
+    topology, pricing engine, DP family)."""
+    span_sig, hw, topology, engine = sig
+    return content_token((_SPAN_TOKEN_FAMILY, engine, topology.value,
+                          sorted(dataclasses.asdict(hw).items()), span_sig))
+
+
+def _span_store(sig: Tuple, plan: SegmentPlan) -> None:
+    _span_plan_cache[sig] = plan
+    if len(_span_plan_cache) > _SPAN_CACHE_MAX:
+        _span_plan_cache.popitem(last=False)
+
+
+def _shelf_fetch(sig: Tuple, g: Graph, i: int, j: int
+                 ) -> Optional[SegmentPlan]:
+    """Shelf tier lookup; a hit is rebound to this span's ops and
+    promoted into the memory tier."""
+    if _span_shelf is None:
+        return None
+    plan = _span_shelf.load(_span_token(sig))
+    if plan is None:
+        return None
+    plan = _rebind_span(plan, g, i, j)
+    _span_store(sig, plan)
+    return plan
+
+
+def _shelf_put(sig: Tuple, plan: SegmentPlan) -> None:
+    if _span_shelf is not None:
+        _span_shelf.save(_span_token(sig), plan)
 
 
 def _span_signature(g: Graph, seg: Segment) -> Tuple:
@@ -789,6 +870,119 @@ def _rebind_span(plan: SegmentPlan, g: Graph, i: int, j: int) -> SegmentPlan:
                                dataflows=dfs, granularities=grans)
 
 
+# ---------------------------------------------------------------------------
+# Plan folding: solve one representative stage-1 segment per structural
+# equivalence class, tile the rest by translation (docs/planner.md)
+# ---------------------------------------------------------------------------
+
+
+_FOLD_SIG_CACHE: Dict[Tuple[int, int, int], Tuple[Graph, Tuple]] = {}
+
+
+def _fold_signature(g: Graph, seg: Segment) -> Tuple:
+    """Everything ``_best_subsegmentation`` reads from a stage-1 segment,
+    by value and modulo slot offset: the ops' shapes, strides and
+    in-segment wiring (the ``_span_signature`` value rules) plus EVERY
+    skip edge touching the segment, slot-relative with a ``-1`` sentinel
+    for an external endpoint.  The sentinel is sound because an external
+    endpoint only ever contributes its volume — which sub-spans an edge
+    crosses is decided by the in-segment endpoint alone.  Two segments
+    with equal fold signatures plan identically up to translation: every
+    sub-span signature, branch region, streamability verdict and prep
+    input the DP consumes is a pure function of this value."""
+    key = (id(g), seg.start, seg.stop)
+    hit = _FOLD_SIG_CACHE.get(key)
+    if hit is not None and hit[0] is g:
+        return hit[1]
+    ops_sig = tuple(
+        (op.kind.value, tuple(sorted(op.dims.items())), op.stride,
+         tuple(sorted(g.index(s) - seg.start for s in op.inputs
+                      if seg.start <= g.index(s) < seg.stop)))
+        for op in g.ops[seg.start:seg.stop])
+    skips = []
+    for p, c in g.skip_edges():
+        if p in seg or c in seg:
+            skips.append((p - seg.start if p in seg else -1,
+                          c - seg.start if c in seg else -1,
+                          g.ops[p].output_volume()))
+    sig = (ops_sig, tuple(sorted(skips)))
+    if len(_FOLD_SIG_CACHE) >= _SPAN_MEMO_MAX:
+        _FOLD_SIG_CACHE.clear()
+    _FOLD_SIG_CACHE[key] = (g, sig)
+    return sig
+
+
+def _translate_span(plan: SegmentPlan, g: Graph, delta: int) -> SegmentPlan:
+    """Re-point a plan at the slot-translated copy of its span — the
+    tiling step of plan folding.  Generalizes ``_rebind_span`` to
+    branch-parallel plans: placement, costs, intra skips, the slot DAG
+    and the branch groups are all slot-relative already, so only the
+    segment indices and the op bindings move."""
+    seg = plan.segment.translate(delta)
+    ops = list(g.ops[seg.start:seg.stop])
+    dfs = [dataclasses.replace(df, op_name=op.name)
+           for df, op in zip(plan.dataflows, ops)]
+    grans = [dataclasses.replace(gr, producer=ops[u].name,
+                                 consumer=ops[v].name)
+             for gr, (u, v) in zip(plan.granularities, plan.pipeline_edges)]
+    return dataclasses.replace(plan, segment=seg, ops=ops,
+                               dataflows=dfs, granularities=grans)
+
+
+def _fold_keys(g: Graph):
+    """Fold-equivalence key function over stage-1 segments.
+
+    Fast path: segments in the *interior* of one periodic run — a full
+    reuse-distance margin away from both run edges, so their whole wiring
+    environment repeats with the run — fold by (run, phase, depth) alone,
+    no signature computed.  Everything else, seam and boundary segments
+    included, falls back to the exact content signature: the spans around
+    each period seam are re-solved exactly, never assumed periodic.
+    """
+    runs = periodic_regions(g)
+    margin = g.max_reuse_distance()
+
+    def key(seg: Segment) -> Tuple:
+        for run in runs:
+            if (run.start + margin <= seg.start
+                    and seg.stop + margin <= run.stop):
+                return ("periodic", run.start, run.period,
+                        (seg.start - run.start) % run.period,
+                        seg.depth, seg.branches)
+            if seg.start < run.stop and run.start < seg.stop:
+                break          # overlaps this run but not interior
+        return ("sig", _fold_signature(g, seg), seg.branches)
+
+    return key
+
+
+def _fold_plan_segments(g: Graph, segs: Sequence[Segment], solve
+                        ) -> List[SegmentPlan]:
+    """Plan stage-1 ``segs``, folding structurally identical ones: the
+    first segment of each fold class is solved for real, the rest reuse
+    its plans translated to their slot offsets.  Bit-identical to solving
+    every segment independently because fold-equal segments present the
+    planner with value-identical inputs and the pricing engines are
+    deterministic value functions — the unfolded run would produce
+    exactly the translated plans, float for float (pinned by the
+    ``test_plan_folding`` parity suite)."""
+    key_of = _fold_keys(g)
+    solved: Dict[Tuple, Tuple[int, List[SegmentPlan]]] = {}
+    out: List[SegmentPlan] = []
+    for seg in segs:
+        k = key_of(seg)
+        hit = solved.get(k)
+        if hit is None:
+            plans = solve(seg)
+            solved[k] = (seg.start, plans)
+            out.extend(plans)
+        else:
+            rep_start, plans = hit
+            out.extend(_translate_span(p, g, seg.start - rep_start)
+                       for p in plans)
+    return out
+
+
 def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
                      engine: str = "batch"):
     """Memoized ``plan(i, j)`` over sub-segment cut points.
@@ -802,11 +996,6 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
     memo: Dict[Tuple[int, int], SegmentPlan] = {}
     cacheable = engine in ("batch", "jax") and df_fn is _pipeorgan_df_fn
 
-    def _store_cached(sig: Tuple, plan: SegmentPlan) -> None:
-        _span_plan_cache[sig] = plan
-        if len(_span_plan_cache) > _SPAN_CACHE_MAX:
-            _span_plan_cache.popitem(last=False)
-
     def plan_ij(i: int, j: int) -> SegmentPlan:
         key = (i, j)
         if key in memo:
@@ -818,13 +1007,18 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
             # must never cross-pollinate an exact-equality guard
             sig = (_span_signature(g, seg), hw, topology, engine)
             hit = _span_plan_cache.get(sig)
-            if hit is None:
-                plan = _plan_segment(g, seg, hw, topology, df_fn,
-                                     None, None, engine=engine)
-                _store_cached(sig, plan)
-            else:
+            if hit is not None:
+                _span_mem_stats["hits"] += 1
                 _span_plan_cache.move_to_end(sig)
                 plan = _rebind_span(hit, g, i, j)
+            else:
+                _span_mem_stats["misses"] += 1
+                plan = _shelf_fetch(sig, g, i, j)
+                if plan is None:
+                    plan = _plan_segment(g, seg, hw, topology, df_fn,
+                                         None, None, engine=engine)
+                    _span_store(sig, plan)
+                    _shelf_put(sig, plan)
         else:
             plan = _plan_segment(g, seg, hw, topology, df_fn,
                                  None, None, engine=engine)
@@ -859,11 +1053,17 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
                 sig = (_span_signature(g, seg), hw, topology, engine)
                 hit = _span_plan_cache.get(sig)
                 if hit is not None:
+                    _span_mem_stats["hits"] += 1
                     _span_plan_cache.move_to_end(sig)
                     memo[(i, j)] = _rebind_span(hit, g, i, j)
                     continue
                 if sig in first_of_sig:
                     aliases.append((i, j, first_of_sig[sig]))
+                    continue
+                _span_mem_stats["misses"] += 1
+                shelf_plan = _shelf_fetch(sig, g, i, j)
+                if shelf_plan is not None:
+                    memo[(i, j)] = shelf_plan
                     continue
                 first_of_sig[sig] = len(todo)
             todo.append((i, j, sig))
@@ -883,7 +1083,8 @@ def _segment_planner(g: Graph, hw: HWConfig, topology: Topology, df_fn,
             plans.append(plan)
             memo[(i, j)] = plan
             if sig is not None:
-                _store_cached(sig, plan)
+                _span_store(sig, plan)
+                _shelf_put(sig, plan)
         for i, j, t in aliases:
             memo[(i, j)] = _rebind_span(plans[t], g, i, j)
 
@@ -1091,7 +1292,8 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
                    objective: Objective = DEFAULT_OBJECTIVE,
                    constraints: Sequence[Constraint] = (),
                    max_bursts: Optional[int] = None,
-                   engine: str = "numpy") -> PlanResult:
+                   engine: str = "numpy",
+                   fold: bool = True) -> PlanResult:
     """Full PipeOrgan flow (Fig. 7) with the cut-point DP mapper.
 
     Stage 1's footprint heuristic gives the *maximum useful* depth per
@@ -1124,18 +1326,27 @@ def plan_pipeorgan(g: Graph, hw: HWConfig,
     vectorized host engine, bit-stable against the goldens), ``"jax"``
     (batched jit/vmap pricing, ~1e-9 relative agreement), or ``"auto"``
     (jax when available).  See docs/engines.md.
+
+    ``fold=True`` (default) plans one representative per class of
+    structurally identical stage-1 segments and tiles the rest by
+    translation — near-O(unique structure) cold planning on periodic
+    graphs (LM layer stacks), bit-identical to ``fold=False`` (a pure
+    speed knob, deliberately NOT part of ``PlanRequest`` identity).
     """
     eng = resolve_engine(engine)
-    plans: List[SegmentPlan] = []
-    for s in segment_graph(g, hw):
-        plans.extend(_best_subsegmentation(g, s, hw, topology,
-                                           _pipeorgan_df_fn,
-                                           engine=eng,
-                                           sim_check=sim_check,
-                                           branch=True,
-                                           objective=objective,
-                                           constraints=constraints,
-                                           max_bursts=max_bursts))
+
+    def solve(s: Segment) -> List[SegmentPlan]:
+        return _best_subsegmentation(g, s, hw, topology, _pipeorgan_df_fn,
+                                     engine=eng, sim_check=sim_check,
+                                     branch=True, objective=objective,
+                                     constraints=constraints,
+                                     max_bursts=max_bursts)
+
+    segs = segment_graph(g, hw)
+    if fold:
+        plans = _fold_plan_segments(g, segs, solve)
+    else:
+        plans = [p for s in segs for p in solve(s)]
     return PlanResult(g.name, "pipeorgan", topology, plans)
 
 
@@ -1145,25 +1356,30 @@ def plan_pipeorgan_linear(g: Graph, hw: HWConfig,
                           objective: Objective = DEFAULT_OBJECTIVE,
                           constraints: Sequence[Constraint] = (),
                           max_bursts: Optional[int] = None,
-                          engine: str = "numpy") -> PlanResult:
+                          engine: str = "numpy",
+                          fold: bool = True) -> PlanResult:
     """The cut-point DP *without* branch-parallel candidates.
 
     This is exactly the pre-branch-aware planner: every series-parallel
     region is serialized in topological order.  Kept as the guard baseline
     (``plan_pipeorgan`` must never lose to it on either objective axis,
     per objective) and for the co-placed-vs-serialized differential
-    sweeps.
+    sweeps.  ``fold`` as in ``plan_pipeorgan``.
     """
     eng = resolve_engine(engine)
-    plans: List[SegmentPlan] = []
-    for s in segment_graph(g, hw):
-        plans.extend(_best_subsegmentation(g, s, hw, topology,
-                                           _pipeorgan_df_fn,
-                                           engine=eng,
-                                           sim_check=sim_check,
-                                           objective=objective,
-                                           constraints=constraints,
-                                           max_bursts=max_bursts))
+
+    def solve(s: Segment) -> List[SegmentPlan]:
+        return _best_subsegmentation(g, s, hw, topology, _pipeorgan_df_fn,
+                                     engine=eng, sim_check=sim_check,
+                                     objective=objective,
+                                     constraints=constraints,
+                                     max_bursts=max_bursts)
+
+    segs = segment_graph(g, hw)
+    if fold:
+        plans = _fold_plan_segments(g, segs, solve)
+    else:
+        plans = [p for s in segs for p in solve(s)]
     return PlanResult(g.name, "pipeorgan-linear", topology, plans)
 
 
@@ -1338,6 +1554,9 @@ register_cache("pair_traffic", lambda: tuple(_pair_traffic.cache_info()))
 # plan_api in the import DAG — registered here like flow_batch is from
 # the facade module
 register_cache("route_incidence", route_incidence_cache_info)
+# the span cache's memory tier; the persistent tier ("span_shelf")
+# registers on set_span_shelf and unregisters on removal
+register_cache("span_cache", span_cache_info)
 
 
 def _jax_price_cache_info() -> Tuple[int, int, Optional[int], int]:

@@ -32,7 +32,7 @@ import threading
 import warnings
 from typing import Dict, Mapping, Optional, Tuple, Union
 
-from .artifact import PlanSchemaError, PlanStore
+from .artifact import PlanSchemaError, PlanStore, SpanShelf
 from .graph import Graph
 from .hwconfig import HWConfig, PAPER_HW
 from .noc import Topology, flow_batch_cache_info
@@ -66,9 +66,18 @@ class Planner:
     """
 
     def __init__(self, maxsize: int = 128,
-                 store: Optional[PlanStore] = None):
+                 store: Optional[PlanStore] = None,
+                 span_shelf: Optional[Union[SpanShelf, str]] = None):
         self.maxsize = maxsize
         self.store = store
+        if span_shelf is not None:
+            # the span shelf backs the DP's process-wide span cache, so
+            # installing it here installs it for every planner in the
+            # process (it is a content-addressed tier: different facades
+            # sharing it can only ever help each other)
+            if not isinstance(span_shelf, SpanShelf):
+                span_shelf = SpanShelf(span_shelf)
+            _planner.set_span_shelf(span_shelf)
         self._cache: "collections.OrderedDict[PlanRequest, PlanResult]" = \
             collections.OrderedDict()
         self._validate_cache: \

@@ -1,0 +1,64 @@
+"""Golden-snapshot regression for the LM zoo planning flow.
+
+``tests/golden/lm_plans.json`` pins, for every LM serving graph
+(decode step + each prefill bucket of every registered arch), the
+pipeorgan@AMP plan's segmentation, spatial organization, GB-staging
+decision, congestion verdict and analytical costs — the same contract
+``test_golden_plans`` pins for XR-bench, over the periodic-stack
+workloads that exercise plan folding for real.  Plans are produced with
+the default ``fold=True``; the parity suite (``test_plan_folding``)
+separately guarantees folding cannot shift any of these numbers.
+
+Regenerate deliberately (after verifying the change is intended) with:
+
+    PYTHONPATH=src python -c "import tests.test_golden_lm_plans as t; t.regenerate()"
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs.lm_graphs import lm_graphs
+from repro.core import PAPER_HW, Topology
+from repro.core.planner import plan_pipeorgan
+
+from tests.test_golden_plans import FLOAT_RTOL, _snapshot_plan
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "lm_plans.json"
+
+
+def regenerate() -> None:
+    golden = {name: _snapshot_plan(plan_pipeorgan(g, PAPER_HW, Topology.AMP))
+              for name, g in sorted(lm_graphs().items())}
+    GOLDEN_PATH.write_text(json.dumps(golden, indent=1, sort_keys=True)
+                           + "\n")
+
+
+def _golden() -> dict:
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+def test_golden_file_covers_all_lm_graphs():
+    assert sorted(_golden()) == sorted(lm_graphs())
+
+
+@pytest.mark.parametrize("name", sorted(lm_graphs()))
+def test_lm_plan_matches_golden_snapshot(name):
+    want = _golden()[name]
+    got = _snapshot_plan(plan_pipeorgan(lm_graphs()[name], PAPER_HW,
+                                        Topology.AMP))
+    assert got["topology"] == want["topology"]
+    assert len(got["segments"]) == len(want["segments"]), (
+        f"{name}: segmentation changed "
+        f"({len(want['segments'])} -> {len(got['segments'])} segments)")
+    for i, (gs, ws) in enumerate(zip(got["segments"], want["segments"])):
+        ctx = f"{name} segment {i} [{ws['start']},{ws['stop']})"
+        for key in ("start", "stop", "depth", "org", "via_global_buffer",
+                    "congested", "branches", "edges"):
+            assert gs[key] == ws[key], (
+                f"{ctx}: {key} changed {ws[key]!r} -> {gs[key]!r}")
+        for key in ("latency_cycles", "dram_bytes"):
+            assert gs[key] == pytest.approx(ws[key], rel=FLOAT_RTOL), (
+                f"{ctx}: {key} drifted {ws[key]} -> {gs[key]}")
+    for key in ("latency_cycles", "dram_bytes"):
+        assert got[key] == pytest.approx(want[key], rel=FLOAT_RTOL)

@@ -1,0 +1,229 @@
+"""Plan folding: folded plans are bit-identical to unfolded plans.
+
+The tentpole invariant — ``fold=True`` is a pure planner-speed knob.  The
+parity suite plans real LM decode/prefill graphs (dense + MoE) across
+topologies and objectives with every planner cache cleared between the
+folded and unfolded runs, and asserts ``plan_diffs == []`` — the same
+field-by-field, float-for-float comparison the artifact round-trip uses.
+Also pins ``periodic_regions`` (the digest-run detector behind the fast
+path), ``Segment.translate``, and the ``Graph.consumers`` adjacency map
+against the naive scan it replaced.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.lm_graphs import decode_graph, prefill_graph
+from repro.configs import get_config
+from repro.configs.xrbench import all_tasks
+from repro.core import (PAPER_HW, PeriodicRun, Segment, Topology, add, gemm,
+                        flow_batch_cache_clear, latency_first, min_dram,
+                        periodic_regions, plan_diffs, span_cache_clear)
+from repro.core.graph import Graph, chain, conv
+from repro.core import noc as noc_mod
+from repro.core import planner as planner_mod
+from repro.core.planner import plan_pipeorgan
+
+HW = PAPER_HW
+
+
+def _cold_clear() -> None:
+    """Reset every cache shared between planning runs, so the folded and
+    unfolded timings/plans are both genuinely cold."""
+    planner_mod._pair_traffic.cache_clear()
+    planner_mod._cached_place.cache_clear()
+    planner_mod._SPAN_SIG_CACHE.clear()
+    planner_mod._FOLD_SIG_CACHE.clear()
+    span_cache_clear()
+    flow_batch_cache_clear()
+    noc_mod.route_incidence_cache_clear()
+
+
+def _lm_graph(name: str) -> Graph:
+    if name == "qwen-decode":
+        return decode_graph(get_config("qwen2.5-3b"))
+    if name == "moe-decode":
+        return decode_graph(get_config("granite-moe-1b-a400m"))
+    if name == "moe-prefill":
+        return prefill_graph(get_config("granite-moe-1b-a400m"), seq=1024)
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# parity: folded == unfolded, float for float
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("objective", [latency_first(), min_dram()],
+                         ids=["latency_first", "min_dram"])
+@pytest.mark.parametrize("topology", [Topology.MESH, Topology.AMP])
+@pytest.mark.parametrize("graph_name", ["qwen-decode", "moe-decode"])
+def test_folded_plans_bit_identical(graph_name, topology, objective):
+    g = _lm_graph(graph_name)
+    _cold_clear()
+    folded = plan_pipeorgan(g, HW, topology, objective=objective)
+    _cold_clear()
+    unfolded = plan_pipeorgan(g, HW, topology, objective=objective,
+                              fold=False)
+    assert plan_diffs(folded, unfolded) == []
+
+
+def test_folded_parity_prefill_moe():
+    """A deep-segment prefill graph (branch regions, real DP work)."""
+    g = _lm_graph("moe-prefill")
+    _cold_clear()
+    folded = plan_pipeorgan(g, HW, Topology.AMP)
+    _cold_clear()
+    unfolded = plan_pipeorgan(g, HW, Topology.AMP, fold=False)
+    assert plan_diffs(folded, unfolded) == []
+
+
+@pytest.mark.parametrize("task", ["object_detection", "keyword_spotting"])
+def test_folded_parity_xrbench(task):
+    """XR-bench graphs (branchy, barely periodic) must fold-plan
+    identically too — folding must never change a plan, only skip
+    redundant solves."""
+    g = all_tasks()[task]
+    _cold_clear()
+    folded = plan_pipeorgan(g, HW, Topology.AMP)
+    _cold_clear()
+    unfolded = plan_pipeorgan(g, HW, Topology.AMP, fold=False)
+    assert plan_diffs(folded, unfolded) == []
+
+
+def test_folding_actually_folds():
+    """On a periodic stack the folded run solves far fewer segments than
+    exist (guards against the fast path silently degrading to per-segment
+    solving)."""
+    g = _lm_graph("moe-decode")
+    calls = []
+    orig = planner_mod._best_subsegmentation
+
+    def counting(g_, seg, *a, **k):
+        calls.append(seg)
+        return orig(g_, seg, *a, **k)
+
+    planner_mod._best_subsegmentation = counting
+    try:
+        _cold_clear()
+        plan_pipeorgan(g, HW, Topology.AMP)
+    finally:
+        planner_mod._best_subsegmentation = orig
+    from repro.core.depth import segment_graph
+    n_segs = len(segment_graph(g, HW))
+    assert len(calls) < n_segs / 4, (
+        f"folding solved {len(calls)} of {n_segs} segments")
+
+
+# ---------------------------------------------------------------------------
+# periodic_regions
+# ---------------------------------------------------------------------------
+
+
+def _uniform_chain(n: int) -> Graph:
+    return chain("u", [conv(f"c{i}", 1, 16, 16, 8, 8, r=3)
+                       for i in range(n)])
+
+
+def test_periodic_uniform_chain_is_period_one():
+    # the head op has no inputs, so its digest differs: the run starts
+    # at op 1 and covers the remaining n-1 identically-wired ops
+    runs = periodic_regions(_uniform_chain(8))
+    assert runs == [PeriodicRun(1, 1, 7)]
+
+
+def test_periodic_two_op_block():
+    ops = []
+    prev = ()
+    for i in range(5):
+        a = gemm(f"a{i}", 4, 8, 8, inputs=prev)
+        b = gemm(f"b{i}", 4, 16, 8, inputs=(a.name,))
+        ops += [a, b]
+        prev = (b.name,)
+    runs = periodic_regions(Graph("p2", ops))
+    # the smallest repeating period is 2 (a/b alternation); a0 (no
+    # inputs) digests differently, so the run starts at b0
+    assert runs == [PeriodicRun(1, 2, 4)]
+
+
+def test_periodic_no_repetition():
+    ops = [gemm(f"g{i}", 4, 8 + i, 8, inputs=(f"g{i-1}",) if i else ())
+           for i in range(6)]
+    assert periodic_regions(Graph("aper", ops)) == []
+
+
+def test_periodic_min_count_respected():
+    assert periodic_regions(_uniform_chain(8), min_count=8) == []
+    assert periodic_regions(_uniform_chain(8), min_count=7) == \
+        [PeriodicRun(1, 1, 7)]
+
+
+def test_periodic_runs_never_overlap_and_are_sorted():
+    # irregular: uniform run, an odd op, another uniform run
+    ops = [conv(f"c{i}", 1, 16, 16, 8, 8, r=3) for i in range(4)]
+    ops.append(dataclasses.replace(
+        conv("odd", 1, 16, 16, 8, 8, r=5), inputs=("c3",)))
+    ops += [dataclasses.replace(conv(f"d{i}", 1, 16, 16, 8, 8, r=3),
+                                inputs=("odd" if i == 0 else f"d{i-1}",))
+            for i in range(4)]
+    runs = periodic_regions(Graph("irr", ops))
+    for a, b in zip(runs, runs[1:]):
+        assert a.stop <= b.start
+    assert runs == sorted(runs, key=lambda r: r.start)
+    assert all(r.count >= 2 for r in runs)
+
+
+def test_periodic_longer_multiple_subsumed():
+    """A period-2 run inside a period-1 run is not reported twice."""
+    runs = periodic_regions(_uniform_chain(9))
+    assert runs == [PeriodicRun(1, 1, 8)]
+
+
+def test_op_digest_translation_invariant():
+    g = _lm_graph("qwen-decode")
+    runs = periodic_regions(g)
+    assert runs, "decode stack must be detected as periodic"
+    r = runs[0]
+    assert r.count >= 2
+    for k in range(r.period):
+        assert g.op_digest(r.start + k) == g.op_digest(r.start + r.period
+                                                       + k)
+
+
+# ---------------------------------------------------------------------------
+# Segment.translate
+# ---------------------------------------------------------------------------
+
+
+def test_segment_translate():
+    s = Segment(3, 7, branches=((0, 1), (2,)))
+    t = s.translate(10)
+    assert (t.start, t.stop) == (13, 17)
+    assert t.branches == s.branches        # segment-relative: unchanged
+    assert t.depth == s.depth
+    back = t.translate(-10)
+    assert back == s
+
+
+# ---------------------------------------------------------------------------
+# Graph.consumers: adjacency map pinned against the naive scan
+# ---------------------------------------------------------------------------
+
+
+def _naive_consumers(g: Graph, name: str):
+    return [op for op in g.ops if name in op.inputs]
+
+
+@pytest.mark.parametrize("graph_name", ["moe-decode", "qwen-decode"])
+def test_consumers_matches_naive_scan(graph_name):
+    g = _lm_graph(graph_name)
+    for op in g.ops:
+        assert g.consumers(op.name) == _naive_consumers(g, op.name)
+    assert g.consumers("no-such-op") == []
+
+
+def test_consumers_dedups_repeated_inputs():
+    a = gemm("a", 4, 8, 8)
+    b = add("b", 4, 1, 1, 8, inputs=("a", "a"))   # same producer twice
+    g = Graph("dup", [a, b])
+    assert g.consumers("a") == [b]

@@ -245,7 +245,8 @@ def test_cache_info_exposes_every_layer():
     planner = Planner(maxsize=8)
     info = planner.cache_info_all()
     assert set(info) == {"plan", "place", "pair_traffic", "flow_batch",
-                         "route_incidence", "sim_programs", "jax_price"}
+                         "route_incidence", "sim_programs", "jax_price",
+                         "span_cache"}
     for ci in info.values():
         assert ci.hits >= 0 and ci.misses >= 0 and ci.currsize >= 0
     assert planner.cache_info("flow_batch") == info["flow_batch"]

@@ -1,0 +1,233 @@
+"""Persistent span shelf: the on-disk tier behind the DP span cache.
+
+Pins the two-tier contract — memory miss consults the shelf, shelf miss
+solves and populates both tiers — and the headline property: a process
+that inherits a warm shelf replans a workload with ZERO DP segment
+solves, producing field-identical plans.  Also pins schema/kind/token
+gating (stale or foreign files are misses, never errors), the cache
+registry wiring (``span_shelf`` appears in ``Planner.cache_info_all()``
+while installed), and the ``Planner(span_shelf=...)`` facade hookup.
+"""
+import json
+
+import pytest
+
+from repro.configs.lm_graphs import decode_graph
+from repro.configs import get_config
+from repro.core import (PAPER_HW, Planner, SpanShelf, Topology,
+                        flow_batch_cache_clear, get_span_shelf, plan_diffs,
+                        set_span_shelf, span_cache_clear, span_cache_info)
+from repro.core import noc as noc_mod
+from repro.core import planner as planner_mod
+from repro.core.artifact import SPAN_KIND, SPAN_SCHEMA_VERSION
+from repro.core.planner import plan_pipeorgan
+
+HW = PAPER_HW
+
+
+@pytest.fixture(autouse=True)
+def _clean_shelf_state():
+    """Every test starts and ends with no shelf installed and a cold
+    memory tier (the shelf is process-global by design)."""
+    set_span_shelf(None)
+    span_cache_clear()
+    yield
+    set_span_shelf(None)
+    span_cache_clear()
+
+
+def _cold_clear() -> None:
+    planner_mod._pair_traffic.cache_clear()
+    planner_mod._cached_place.cache_clear()
+    planner_mod._SPAN_SIG_CACHE.clear()
+    planner_mod._FOLD_SIG_CACHE.clear()
+    span_cache_clear()
+    flow_batch_cache_clear()
+    noc_mod.route_incidence_cache_clear()
+
+
+def _graph():
+    return decode_graph(get_config("qwen2.5-3b"))
+
+
+def _forbid_solves(monkeypatch):
+    """Fail the test if any DP segment is actually solved (both the
+    one-at-a-time and the batched prime() solve paths)."""
+    def boom(*a, **k):
+        raise AssertionError("DP segment solve on a warm shelf")
+    monkeypatch.setattr(planner_mod, "_plan_segment", boom)
+    monkeypatch.setattr(planner_mod, "_prep_segment", boom)
+
+
+# ---------------------------------------------------------------------------
+# the headline round trip
+# ---------------------------------------------------------------------------
+
+
+def test_warm_shelf_replans_with_zero_dp_solves(tmp_path, monkeypatch):
+    g = _graph()
+    shelf = SpanShelf(tmp_path / "spans")
+    set_span_shelf(shelf)
+    _cold_clear()
+    cold = plan_pipeorgan(g, HW, Topology.AMP)
+    assert len(shelf) > 0, "cold planning must populate the shelf"
+    assert shelf.saves == len(shelf)
+
+    # a "new process": memory tier gone, shelf intact
+    _cold_clear()
+    _forbid_solves(monkeypatch)
+    warm = plan_pipeorgan(g, HW, Topology.AMP)
+    assert plan_diffs(cold, warm) == []
+    assert shelf.hits > 0
+
+
+def test_warm_shelf_serves_unfolded_replan_too(tmp_path, monkeypatch):
+    """fold=False drives every span through the cache lookup path —
+    the shelf must carry the whole workload, not just fold reps."""
+    g = _graph()
+    set_span_shelf(SpanShelf(tmp_path / "spans"))
+    _cold_clear()
+    cold = plan_pipeorgan(g, HW, Topology.AMP)
+    _cold_clear()
+    _forbid_solves(monkeypatch)
+    warm = plan_pipeorgan(g, HW, Topology.AMP, fold=False)
+    assert plan_diffs(cold, warm) == []
+
+
+def test_shelf_shared_across_instances(tmp_path, monkeypatch):
+    """Two SpanShelf instances over one directory see each other's spans
+    (the serve-fleet sharing story)."""
+    g = _graph()
+    root = tmp_path / "spans"
+    set_span_shelf(SpanShelf(root))
+    _cold_clear()
+    cold = plan_pipeorgan(g, HW, Topology.AMP)
+    set_span_shelf(SpanShelf(root))      # fresh instance, same directory
+    _cold_clear()
+    _forbid_solves(monkeypatch)
+    warm = plan_pipeorgan(g, HW, Topology.AMP)
+    assert plan_diffs(cold, warm) == []
+
+
+# ---------------------------------------------------------------------------
+# tier bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_two_tier_stats(tmp_path):
+    g = _graph()
+    shelf = SpanShelf(tmp_path / "spans")
+    set_span_shelf(shelf)
+    _cold_clear()
+    plan_pipeorgan(g, HW, Topology.AMP)
+    hits0, misses0, maxsize, curr = span_cache_info()
+    assert misses0 > 0 and curr > 0 and maxsize > 0
+    # warm memory tier: replanning is all memory hits, shelf untouched
+    shelf_hits_before = shelf.hits
+    plan_pipeorgan(g, HW, Topology.AMP, fold=False)
+    hits1, misses1, _, _ = span_cache_info()
+    assert hits1 > hits0
+    assert misses1 == misses0
+    assert shelf.hits == shelf_hits_before
+
+
+def test_shelf_info_shape(tmp_path):
+    shelf = SpanShelf(tmp_path / "spans")
+    assert shelf.info() == (0, 0, 0, 0)
+    assert shelf.load("0" * 64) is None
+    assert shelf.info() == (0, 1, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# gating: stale/foreign files are misses, never errors
+# ---------------------------------------------------------------------------
+
+
+def _one_shelved(tmp_path):
+    g = _graph()
+    shelf = SpanShelf(tmp_path / "spans")
+    set_span_shelf(shelf)
+    _cold_clear()
+    plan_pipeorgan(g, HW, Topology.AMP)
+    path = next(iter(shelf.root.glob(f"*{SpanShelf.SUFFIX}")))
+    token = path.name[: -len(SpanShelf.SUFFIX)]
+    return shelf, path, token
+
+
+def test_corrupt_json_is_a_miss(tmp_path):
+    shelf, path, token = _one_shelved(tmp_path)
+    path.write_text("{not json")
+    assert shelf.load(token) is None
+
+
+def test_wrong_kind_is_a_miss(tmp_path):
+    shelf, path, token = _one_shelved(tmp_path)
+    doc = json.loads(path.read_text())
+    doc["kind"] = "something-else"
+    path.write_text(json.dumps(doc))
+    assert shelf.load(token) is None
+
+
+def test_wrong_schema_version_is_a_miss(tmp_path):
+    shelf, path, token = _one_shelved(tmp_path)
+    doc = json.loads(path.read_text())
+    doc["schema_version"] = SPAN_SCHEMA_VERSION + 1
+    path.write_text(json.dumps(doc))
+    assert shelf.load(token) is None
+
+
+def test_token_mismatch_is_a_miss(tmp_path):
+    """A file whose embedded token disagrees with its name (e.g. a
+    mis-copied shelf) must not be served."""
+    shelf, path, token = _one_shelved(tmp_path)
+    other = "f" * 64
+    path.rename(shelf.path_for(other))
+    assert shelf.load(other) is None       # embedded token disagrees
+    assert shelf.load(token) is None       # original name gone -> miss
+
+
+def test_saved_doc_shape(tmp_path):
+    _, path, token = _one_shelved(tmp_path)
+    doc = json.loads(path.read_text())
+    assert doc["kind"] == SPAN_KIND
+    assert doc["schema_version"] == SPAN_SCHEMA_VERSION
+    assert doc["token"] == token
+    assert "plan" in doc
+
+
+# ---------------------------------------------------------------------------
+# registry + facade wiring
+# ---------------------------------------------------------------------------
+
+
+def test_shelf_appears_in_cache_registry(tmp_path):
+    p = Planner()
+    assert "span_shelf" not in p.cache_info_all()
+    assert "span_cache" in p.cache_info_all()
+    set_span_shelf(SpanShelf(tmp_path / "spans"))
+    assert "span_shelf" in p.cache_info_all()
+    set_span_shelf(None)
+    assert "span_shelf" not in p.cache_info_all()
+
+
+def test_planner_facade_installs_shelf(tmp_path):
+    root = tmp_path / "spans"
+    Planner(span_shelf=str(root))
+    shelf = get_span_shelf()
+    assert isinstance(shelf, SpanShelf)
+    assert shelf.root == root
+    # a ready-made instance is accepted as-is
+    mine = SpanShelf(tmp_path / "other")
+    Planner(span_shelf=mine)
+    assert get_span_shelf() is mine
+
+
+def test_span_token_separates_topologies():
+    g = _graph()
+    from repro.core.depth import segment_graph
+    seg = segment_graph(g, HW)[0]
+    sig = planner_mod._span_signature(g, seg)
+    t_amp = planner_mod._span_token((sig, HW, Topology.AMP, "batch"))
+    t_mesh = planner_mod._span_token((sig, HW, Topology.MESH, "batch"))
+    t_jax = planner_mod._span_token((sig, HW, Topology.AMP, "jax"))
+    assert len({t_amp, t_mesh, t_jax}) == 3

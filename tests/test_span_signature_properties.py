@@ -1,0 +1,145 @@
+"""Hypothesis properties for the span/fold signatures.
+
+The span cache and the span shelf are only sound if ``_span_signature``
+separates everything the DP reads from a span — any mutation of an op's
+shape, stride or in-span wiring must change the signature — while
+slot-translated copies of the same structure must collide (that collision
+IS the cross-layer reuse).  Same module-gating idiom as
+``test_core_properties``: skipped wholesale when hypothesis is absent.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import dataclasses  # noqa: E402
+
+from repro.core.depth import Segment  # noqa: E402
+from repro.core.graph import Graph, add, gemm  # noqa: E402
+from repro.core import planner as planner_mod  # noqa: E402
+
+
+def _span_sig(g: Graph, seg: Segment):
+    # bypass the identity memo: property runs mutate ops between calls
+    planner_mod._SPAN_SIG_CACHE.clear()
+    return planner_mod._span_signature(g, seg)
+
+
+def _block(prefix: str, prev: str, n: int, m: int, k: int):
+    """A small residual block: gemm -> gemm -> add(skip)."""
+    a = gemm(f"{prefix}.a", n, m, k, inputs=(prev,) if prev else ())
+    b = gemm(f"{prefix}.b", n, k, m, inputs=(a.name,))
+    r = add(f"{prefix}.r", n, 1, 1, k,
+            inputs=(b.name, prev) if prev else (b.name,))
+    return [a, b, r]
+
+
+def _stack_graph(n: int, m: int, k: int) -> Graph:
+    """head + four residual blocks.  The two *interior* blocks (ops
+    [4, 7) and [7, 10)) see identical wiring environments — an incoming
+    residual skip and an outgoing one — so they must sign identically;
+    the edge blocks differ (no skip past the graph ends)."""
+    ops = [gemm("head", n, k, k)]
+    for b in range(4):
+        ops += _block(f"b{b}", ops[-1].name, n, m, k)
+    return Graph("stack", ops)
+
+
+INNER_A = Segment(4, 7)    # block b1
+INNER_B = Segment(7, 10)   # block b2
+
+
+@given(st.integers(1, 16), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=40, deadline=None)
+def test_translated_identical_blocks_collide(n, m, k):
+    """The interior blocks sign identically — the collision the span
+    cache monetizes."""
+    g = _stack_graph(n, m, k)
+    assert _span_sig(g, INNER_A) == _span_sig(g, INNER_B)
+    # the tail block is NOT interchangeable with an interior one: it has
+    # no outgoing residual skip, and the signature's boundary-crossing
+    # volume must see that (the head block, by contrast, legitimately
+    # collides — its incoming skip happens to carry the same volume, and
+    # volumes are all the DP reads)
+    assert _span_sig(g, Segment(10, 13)) != _span_sig(g, INNER_A)
+
+
+@given(st.integers(1, 16), st.integers(8, 64), st.integers(8, 64),
+       st.integers(0, 2),
+       st.sampled_from(["dim", "stride", "rewire"]))
+@settings(max_examples=60, deadline=None)
+def test_any_mutation_changes_signature(n, m, k, slot, mutation):
+    """Mutating any op's shape, stride, or in-span wiring inside the span
+    changes the signature."""
+    g = _stack_graph(n, m, k)
+    seg = INNER_A
+    base = _span_sig(g, seg)
+    ops = list(g.ops)
+    i = seg.start + slot
+    op = ops[i]
+    if mutation == "dim":
+        dim, v = sorted(op.dims.items())[0]
+        ops[i] = dataclasses.replace(op, dims={**op.dims, dim: v + 1})
+    elif mutation == "stride":
+        ops[i] = dataclasses.replace(op, stride=op.stride + 1)
+    else:  # rewire: repoint one in-span input at the head op instead
+        in_span = [s for s in op.inputs
+                   if seg.start <= g.index(s) < i]
+        if not in_span:
+            return  # nothing to rewire on this slot
+        new_inputs = tuple("head" if s == in_span[0] else s
+                           for s in op.inputs)
+        if new_inputs == op.inputs:
+            return
+        ops[i] = dataclasses.replace(op, inputs=new_inputs)
+    mutated = Graph("stack", ops)
+    assert _span_sig(mutated, seg) != base
+
+
+@given(st.integers(1, 16), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=40, deadline=None)
+def test_out_of_span_context_changes_crossing_not_ops(n, m, k):
+    """The signature sees boundary-crossing skip volume: growing the
+    producer feeding the span from outside changes it."""
+    g = _stack_graph(n, m, k)
+    seg = INNER_A                           # skip arrives from b0.r
+    base = _span_sig(g, seg)
+    ops = list(g.ops)
+    i = g.index("b0.r")
+    op = ops[i]
+    dim, v = sorted(op.dims.items())[-1]
+    ops[i] = dataclasses.replace(op, dims={**op.dims, dim: v + 1})
+    mutated = Graph("stack", ops)
+    assert _span_sig(mutated, seg) != base
+
+
+@given(st.integers(1, 16), st.integers(8, 64), st.integers(8, 64),
+       st.integers(0, 2),
+       st.sampled_from(["dim", "stride"]))
+@settings(max_examples=40, deadline=None)
+def test_fold_signature_separates_mutations_too(n, m, k, slot, mutation):
+    """Same property for the coarser stage-1 fold signature."""
+    g = _stack_graph(n, m, k)
+    seg = INNER_A
+    planner_mod._FOLD_SIG_CACHE.clear()
+    base = planner_mod._fold_signature(g, seg)
+    ops = list(g.ops)
+    i = seg.start + slot
+    op = ops[i]
+    if mutation == "dim":
+        dim, v = sorted(op.dims.items())[0]
+        ops[i] = dataclasses.replace(op, dims={**op.dims, dim: v + 1})
+    else:
+        ops[i] = dataclasses.replace(op, stride=op.stride + 1)
+    mutated = Graph("stack", ops)
+    planner_mod._FOLD_SIG_CACHE.clear()
+    assert planner_mod._fold_signature(mutated, seg) != base
+
+
+@given(st.integers(1, 16), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=40, deadline=None)
+def test_fold_signature_translation_invariant(n, m, k):
+    g = _stack_graph(n, m, k)
+    planner_mod._FOLD_SIG_CACHE.clear()
+    assert planner_mod._fold_signature(g, INNER_A) == \
+        planner_mod._fold_signature(g, INNER_B)
