@@ -79,6 +79,10 @@ def _derived(name: str, rows) -> str:
             gm = [r for r in rows if r.get("task") == "GEOMEAN"][0]
             return (f"load_speedup_vs_replan={gm['load_speedup_vs_replan']};"
                     f"roundtrip_identical={gm['roundtrip_identical']}")
+        if name == "verify_speed":
+            tot = [r for r in rows if r.get("task") == "TOTAL"][0]
+            return (f"verify_pct={tot['verify_pct']};"
+                    f"all_clean={tot['all_clean']}")
         if name == "multi_tenant":
             tot = [r for r in rows if r.get("scenario") == "ALL"][0]
             return (f"guard_holds={tot['guard_holds']};"

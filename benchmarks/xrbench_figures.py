@@ -886,6 +886,70 @@ def lm_planner_speed() -> List[dict]:
     return rows
 
 
+def verify_speed() -> List[dict]:
+    """Static verification cost vs. cold planning cost.
+
+    For the full golden population (XR-bench + LM zoo): cold
+    ``plan_pipeorgan`` wall-clock per graph (cross-call caches dropped
+    each time) against a full default-pass ``verify_plan`` sweep.  The
+    verifier must stay well under 10% of cold planning so the
+    ``Planner(verify="warn")`` gate is a defensible default — the TOTAL
+    row's ``verify_pct`` is the pinned number.  A warmup call runs first:
+    the verifier's lazy imports and shared route-incidence tables are a
+    one-time cost, not a per-plan one.
+    """
+    from repro.configs.lm_graphs import lm_graphs
+    from repro.core import plan_pipeorgan, span_cache_clear
+    from repro.core.verify import verify_plan
+    import repro.core.planner as planner_mod
+
+    def _cold():
+        planner_mod._pair_traffic.cache_clear()
+        planner_mod._cached_place.cache_clear()
+        planner_mod._SPAN_SIG_CACHE.clear()
+        planner_mod._FOLD_SIG_CACHE.clear()
+        span_cache_clear()
+        noc_mod.flow_batch_cache_clear()
+        noc_mod.route_incidence_cache_clear()
+
+    graphs = dict(all_tasks())
+    graphs.update(lm_graphs())
+    plans = {}
+    rows = []
+    t_plan_total = t_verify_total = 0.0
+    clean = True
+    for name, g in sorted(graphs.items()):
+        _cold()
+        t0 = time.perf_counter()
+        plans[name] = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+        t_plan = time.perf_counter() - t0
+        t_plan_total += t_plan
+        rows.append({"task": name, "n_ops": len(g.ops),
+                     "plan_s": round(t_plan, 4)})
+    # warmup (first verify pays lazy imports + incidence-table build)
+    first = next(iter(plans))
+    verify_plan(plans[first], PAPER_HW, Topology.AMP)
+    for row in rows:
+        plan = plans[row["task"]]
+        t0 = time.perf_counter()
+        report = verify_plan(plan, PAPER_HW, Topology.AMP)
+        t_verify = time.perf_counter() - t0
+        t_verify_total += t_verify
+        clean &= report.ok and not report.findings
+        row.update({"verify_s": round(t_verify, 4),
+                    "verify_pct": round(100 * t_verify
+                                        / max(row["plan_s"], 1e-9), 1),
+                    "findings": len(report.findings)})
+    rows.append({
+        "task": "TOTAL",
+        "plan_s": round(t_plan_total, 3),
+        "verify_s": round(t_verify_total, 3),
+        "verify_pct": round(100 * t_verify_total / t_plan_total, 1),
+        "all_clean": clean,
+    })
+    return rows
+
+
 FIGURES = {
     "fig05_aw_ratios": fig05_aw_ratios,
     "fig06_skips": fig06_skips,
@@ -906,4 +970,5 @@ FIGURES = {
     "sim_speed_jax": sim_speed_jax,
     "plan_artifact": plan_artifact,
     "multi_tenant": multi_tenant,
+    "verify_speed": verify_speed,
 }

@@ -11,7 +11,8 @@ import sys
 
 from repro.configs.xrbench import all_tasks
 from repro.core import (LATENCY_BAND, PAPER_HW, PlanRequest, Topology,
-                        get_planner, get_span_shelf, span_cache_info)
+                        get_planner, get_span_shelf, span_cache_info,
+                        verify_plan)
 
 task = sys.argv[1] if len(sys.argv) > 1 else "keyword_spotting"
 g = all_tasks()[task]
@@ -36,6 +37,11 @@ print(f"\nwithin band: {report.latency_within_band}   "
 if not report.ok:
     print("NOTE: marginal congestion verdicts can flip where the analytical "
           "producer-side stall chaining is conservative (docs/simulator.md).")
+
+# the static verifier checks the same plan without touching the simulator:
+# placement/routing/granularity/conservation invariants (docs/verifier.md)
+print("\nstatic verifier (no simulator):")
+print(verify_plan(plan, hw=PAPER_HW, topology=Topology.AMP).summary())
 
 print("\ncache statistics (hits/misses/size) after plan + validate:")
 # registry entries may be empty (never hit) or unbounded (maxsize=None,

@@ -20,6 +20,9 @@ Stage 2 — HW mapping and NoC architecture:
                   `validate`, optional PlanStore read-through
   simulator.py    event-driven pipeline simulator — the differential-
                   testing oracle for the analytical model above
+  verify.py       static plan verifier — pass-based invariant checks over
+                  plans/artifacts (placement, routing, DAG, conservation,
+                  fold, identity) without invoking the simulator
 """
 from .dataflow import Dataflow, choose_dataflow, best_case_arithmetic_intensity
 from .depth import Segment, SkipIndex, segment_depths, segment_graph
@@ -50,6 +53,9 @@ from .artifact import (PLAN_SCHEMA_VERSION, SPAN_SCHEMA_VERSION, PlanArtifact,
                        PlanSchemaError, PlanStore, SpanShelf, plan_diffs,
                        plan_from_dict, plan_to_dict)
 from .planner_service import CacheInfo, Planner, get_planner
+from .verify import (FINDING_CODES, Finding, PlanVerifyError,
+                     PlanVerifyWarning, VerifyReport, pass_names,
+                     verify_plan, verify_segment)
 from .simulator import (DEFAULT_MAX_BURSTS, LATENCY_BAND,
                         LATENCY_BAND_UNCONGESTED, SimReport, SegmentSimReport,
                         SegmentValidation, ValidationReport, sim_cache_clear,
@@ -92,6 +98,8 @@ __all__ = [
     "plan_pipeorgan_uniform", "plan_simba_like", "plan_tangram_like",
     "set_span_shelf", "span_cache_clear", "span_cache_info",
     "CacheInfo", "Planner", "get_planner", "graph_fingerprint",
+    "FINDING_CODES", "Finding", "PlanVerifyError", "PlanVerifyWarning",
+    "VerifyReport", "pass_names", "verify_plan", "verify_segment",
     "DEFAULT_MAX_BURSTS", "LATENCY_BAND", "LATENCY_BAND_UNCONGESTED",
     "SimReport", "SegmentSimReport", "SegmentValidation", "ValidationReport",
     "sim_cache_clear", "sim_cache_info", "simulate_plan",

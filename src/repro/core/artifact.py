@@ -20,8 +20,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -46,12 +47,36 @@ class PlanSchemaError(ValueError):
     """Artifact schema version (or kind) does not match this build."""
 
 
+PathLike = Union[str, os.PathLike]
+
+#: read-through verification modes shared by ``PlanStore`` and
+#: ``SpanShelf`` (mirrors ``core.verify.VERIFY_MODES``).
+VERIFY_MODES = ("off", "warn", "strict")
+
+
+def _check_verify_mode(mode: str) -> str:
+    if mode not in VERIFY_MODES:
+        raise ValueError(f"verify={mode!r}; expected one of {VERIFY_MODES}")
+    return mode
+
+
+def _apply_verify(report: Any, mode: str) -> None:
+    """Enforce a ``VerifyReport`` under ``warn``/``strict`` semantics."""
+    if report.ok:
+        return
+    if mode == "strict":
+        report.raise_if_errors()
+    from .verify import PlanVerifyWarning
+    warnings.warn(f"artifact verification found problems:\n"
+                  f"{report.summary()}", PlanVerifyWarning, stacklevel=4)
+
+
 # ---------------------------------------------------------------------------
 # dataclass <-> dict codecs
 # ---------------------------------------------------------------------------
 
 
-def _py(x):
+def _py(x: Any) -> Any:
     """Coerce numpy scalars leaking out of the analysis layer to plain
     Python so ``json`` round-trips them exactly."""
     if isinstance(x, np.bool_):
@@ -63,49 +88,49 @@ def _py(x):
     return x
 
 
-def _op_to_dict(op: Op) -> dict:
+def _op_to_dict(op: Op) -> Dict[str, Any]:
     return {"name": op.name, "kind": op.kind.value,
             "dims": {k: _py(v) for k, v in op.dims.items()},
             "inputs": list(op.inputs), "stride": _py(op.stride)}
 
 
-def _op_from_dict(d: dict) -> Op:
+def _op_from_dict(d: Dict[str, Any]) -> Op:
     return Op(d["name"], OpKind(d["kind"]), dict(d["dims"]),
               tuple(d["inputs"]), d["stride"])
 
 
-def _dataflow_to_dict(df: Dataflow) -> dict:
+def _dataflow_to_dict(df: Dataflow) -> Dict[str, Any]:
     return {"op_name": df.op_name, "loop_order": list(df.loop_order),
             "tiles": {k: _py(v) for k, v in df.tiles.items()},
             "stationary": df.stationary}
 
 
-def _dataflow_from_dict(d: dict) -> Dataflow:
+def _dataflow_from_dict(d: Dict[str, Any]) -> Dataflow:
     return Dataflow(d["op_name"], tuple(d["loop_order"]), dict(d["tiles"]),
                     d["stationary"])
 
 
-def _gran_to_dict(gr: Granularity) -> dict:
+def _gran_to_dict(gr: Granularity) -> Dict[str, Any]:
     return {"producer": gr.producer, "consumer": gr.consumer,
             "elements": _py(gr.elements),
             "fused_ranks": list(gr.fused_ranks),
             "pipelinable": gr.pipelinable, "reason": gr.reason}
 
 
-def _gran_from_dict(d: dict) -> Granularity:
+def _gran_from_dict(d: Dict[str, Any]) -> Granularity:
     return Granularity(d["producer"], d["consumer"], d["elements"],
                        tuple(d["fused_ranks"]), d["pipelinable"],
                        d["reason"])
 
 
-def _placement_to_dict(pl: Optional[Placement]) -> Optional[dict]:
+def _placement_to_dict(pl: Optional[Placement]) -> Optional[Dict[str, Any]]:
     if pl is None:
         return None
     return {"org": pl.org.value, "grid": pl.grid.tolist(),
             "via_global_buffer": bool(pl.via_global_buffer)}
 
 
-def _placement_from_dict(d: Optional[dict]) -> Optional[Placement]:
+def _placement_from_dict(d: Optional[Dict[str, Any]]) -> Optional[Placement]:
     if d is None:
         return None
     return Placement(SpatialOrg(d["org"]),
@@ -113,7 +138,7 @@ def _placement_from_dict(d: Optional[dict]) -> Optional[Placement]:
                      d["via_global_buffer"])
 
 
-def _noc_to_dict(st: Optional[TrafficStats]) -> Optional[dict]:
+def _noc_to_dict(st: Optional[TrafficStats]) -> Optional[Dict[str, Any]]:
     if st is None:
         return None
     return {"topology": st.topology.value,
@@ -125,7 +150,7 @@ def _noc_to_dict(st: Optional[TrafficStats]) -> Optional[dict]:
             "link_count": _py(st.link_count)}
 
 
-def _noc_from_dict(d: Optional[dict]) -> Optional[TrafficStats]:
+def _noc_from_dict(d: Optional[Dict[str, Any]]) -> Optional[TrafficStats]:
     if d is None:
         return None
     return TrafficStats(Topology(d["topology"]), d["worst_channel_load"],
@@ -134,7 +159,7 @@ def _noc_from_dict(d: Optional[dict]) -> Optional[TrafficStats]:
                         d["link_count"])
 
 
-def _cost_to_dict(c: SegmentCost) -> dict:
+def _cost_to_dict(c: SegmentCost) -> Dict[str, Any]:
     return {"latency_cycles": _py(c.latency_cycles),
             "compute_cycles": _py(c.compute_cycles),
             "dram_bytes": _py(c.dram_bytes),
@@ -147,7 +172,7 @@ def _cost_to_dict(c: SegmentCost) -> dict:
             "congested": bool(c.congested)}
 
 
-def _cost_from_dict(d: dict) -> SegmentCost:
+def _cost_from_dict(d: Dict[str, Any]) -> SegmentCost:
     return SegmentCost(d["latency_cycles"], d["compute_cycles"],
                        d["dram_bytes"], d["sram_bytes"],
                        d["noc_hop_energy"], d["dram_energy"],
@@ -155,7 +180,7 @@ def _cost_from_dict(d: dict) -> SegmentCost:
                        list(d["intervals"]), d["congested"])
 
 
-def _segment_plan_to_dict(s: SegmentPlan) -> dict:
+def _segment_plan_to_dict(s: SegmentPlan) -> Dict[str, Any]:
     return {
         "segment": {"start": s.segment.start, "stop": s.segment.stop,
                     "branches": [list(b) for b in s.segment.branches]},
@@ -177,7 +202,7 @@ def _segment_plan_to_dict(s: SegmentPlan) -> dict:
     }
 
 
-def _segment_plan_from_dict(d: dict) -> SegmentPlan:
+def _segment_plan_from_dict(d: Dict[str, Any]) -> SegmentPlan:
     seg = d["segment"]
     return SegmentPlan(
         segment=Segment(seg["start"], seg["stop"],
@@ -199,13 +224,13 @@ def _segment_plan_from_dict(d: dict) -> SegmentPlan:
     )
 
 
-def plan_to_dict(plan: PlanResult) -> dict:
+def plan_to_dict(plan: PlanResult) -> Dict[str, Any]:
     return {"graph_name": plan.graph_name, "strategy": plan.strategy,
             "topology": plan.topology.value,
             "segments": [_segment_plan_to_dict(s) for s in plan.segments]}
 
 
-def plan_from_dict(d: dict) -> PlanResult:
+def plan_from_dict(d: Dict[str, Any]) -> PlanResult:
     return PlanResult(d["graph_name"], d["strategy"],
                       Topology(d["topology"]),
                       [_segment_plan_from_dict(s) for s in d["segments"]])
@@ -216,10 +241,14 @@ def plan_from_dict(d: dict) -> PlanResult:
 # ---------------------------------------------------------------------------
 
 
-def plan_diffs(a, b, path: str = "plan") -> List[str]:
+def plan_diffs(a: Any, b: Any, path: str = "plan") -> List[str]:
     """Recursive field-by-field diff of two plan trees; ``[]`` means the
     trees are identical (exact float equality — artifacts are lossless,
     so there is no tolerance to grant)."""
+    if a is b:
+        # fold-translated spans share placement/NoC/cost sub-objects by
+        # reference; identity settles them without walking the grids
+        return []
     if dataclasses.is_dataclass(a) and dataclasses.is_dataclass(b):
         if type(a) is not type(b):
             return [f"{path}: type {type(a).__name__} != "
@@ -263,7 +292,7 @@ def plan_diffs(a, b, path: str = "plan") -> List[str]:
 class PlanArtifact:
     """One plan plus the identity of the request that produced it."""
     plan: PlanResult
-    request: Optional[dict] = None      # PlanRequest.to_json_dict()
+    request: Optional[Dict[str, Any]] = None   # PlanRequest.to_json_dict()
     token: Optional[str] = None         # PlanRequest.cache_token()
     schema_version: int = PLAN_SCHEMA_VERSION
 
@@ -299,7 +328,7 @@ class PlanArtifact:
                             token=doc.get("token"),
                             schema_version=version)
 
-    def save(self, path) -> Path:
+    def save(self, path: PathLike) -> Path:
         path = Path(path)
         tmp = path.with_suffix(path.suffix + ".tmp")
         tmp.write_text(self.to_json())
@@ -307,7 +336,7 @@ class PlanArtifact:
         return path
 
     @staticmethod
-    def load(path) -> "PlanArtifact":
+    def load(path: PathLike) -> "PlanArtifact":
         return PlanArtifact.from_json(Path(path).read_text())
 
 
@@ -322,13 +351,21 @@ class PlanStore:
     The offline-plan -> online-serve path: a planning job ``save``s the
     artifacts, the serving process ``load``s them — an exact-identity hit
     or ``None`` — so warm startups make *zero* planner invocations.
+
+    ``verify`` turns on read-through static verification
+    (``core.verify.verify_plan``): every loaded artifact is checked
+    against the plan invariants — ``"warn"`` emits a
+    ``PlanVerifyWarning`` on error findings, ``"strict"`` raises
+    ``PlanVerifyError``.  Writes are never verified here; gate those at
+    the planner (``Planner(verify=...)``).
     """
 
     SUFFIX = ".plan.json"
 
-    def __init__(self, root):
+    def __init__(self, root: PathLike, verify: str = "off") -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.verify = _check_verify_mode(verify)
         self.hits = 0
         self.misses = 0
         self.saves = 0
@@ -356,6 +393,9 @@ class PlanStore:
         if art.token != request.cache_token():
             self.misses += 1
             return None
+        if self.verify != "off":
+            from .verify import verify_plan
+            _apply_verify(verify_plan(art), self.verify)
         self.hits += 1
         return art
 
@@ -364,12 +404,35 @@ class PlanStore:
         return art.plan if art is not None else None
 
     def scan(self) -> Dict[str, PlanArtifact]:
-        """Every artifact in the store, keyed by its request token."""
+        """Every artifact in the store, keyed by its request token.
+
+        Only completed ``*.plan.json`` files are read; in-flight or
+        orphaned ``*.tmp`` files (a writer that died mid-``save``) are
+        skipped — see :meth:`orphaned_tmp` / :meth:`clean_tmp`.
+        """
         out: Dict[str, PlanArtifact] = {}
         for path in sorted(self.root.glob(f"*{self.SUFFIX}")):
+            if path.suffix == ".tmp":       # belt and braces: never decode
+                continue                    # a half-written artifact
             art = PlanArtifact.load(path)
             out[art.token or path.stem] = art
         return out
+
+    def orphaned_tmp(self) -> List[Path]:
+        """Leftover ``*.tmp`` files from writers that died before the
+        atomic ``os.replace``; safe to delete at any time."""
+        return sorted(self.root.glob("*.tmp"))
+
+    def clean_tmp(self) -> List[Path]:
+        """Delete and return the orphaned ``*.tmp`` files."""
+        removed: List[Path] = []
+        for path in self.orphaned_tmp():
+            try:
+                path.unlink()
+            except OSError:
+                continue                    # another cleaner raced us
+            removed.append(path)
+        return removed
 
     def __len__(self) -> int:
         return sum(1 for _ in self.root.glob(f"*{self.SUFFIX}"))
@@ -403,13 +466,19 @@ class SpanShelf:
     directory — writes are atomic (unique tmp + ``os.replace``) and a
     reader never sees a half-written file.  Stale or foreign files
     (wrong kind, schema, or token) read as misses, never as errors.
+
+    ``verify`` turns on read-through static verification
+    (``core.verify.verify_segment`` — the hardware-independent graph and
+    granularity passes): ``"warn"`` emits a ``PlanVerifyWarning`` on
+    error findings, ``"strict"`` raises ``PlanVerifyError``.
     """
 
     SUFFIX = ".span.json"
 
-    def __init__(self, root):
+    def __init__(self, root: PathLike, verify: str = "off") -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.verify = _check_verify_mode(verify)
         self.hits = 0
         self.misses = 0
         self.saves = 0
@@ -439,8 +508,28 @@ class SpanShelf:
                 or doc.get("token") != token):
             self.misses += 1
             return None
+        plan = _segment_plan_from_dict(doc["plan"])
+        if self.verify != "off":
+            from .verify import verify_segment
+            _apply_verify(verify_segment(plan), self.verify)
         self.hits += 1
-        return _segment_plan_from_dict(doc["plan"])
+        return plan
+
+    def orphaned_tmp(self) -> List[Path]:
+        """Leftover ``*.tmp`` files from writers that died before the
+        atomic ``os.replace``; safe to delete at any time."""
+        return sorted(self.root.glob("*.tmp"))
+
+    def clean_tmp(self) -> List[Path]:
+        """Delete and return the orphaned ``*.tmp`` files."""
+        removed: List[Path] = []
+        for path in self.orphaned_tmp():
+            try:
+                path.unlink()
+            except OSError:
+                continue                    # another cleaner raced us
+            removed.append(path)
+        return removed
 
     def __len__(self) -> int:
         return sum(1 for _ in self.root.glob(f"*{self.SUFFIX}"))

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from .dataflow import Dataflow
 from .graph import Op, OpKind

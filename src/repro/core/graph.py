@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -225,7 +224,14 @@ class Graph:
 
     # ---- skip-connection census (Fig. 6) ------------------------------------
     def skip_edges(self) -> List[Tuple[int, int]]:
-        """(producer_idx, consumer_idx) pairs with reuse distance > 1."""
+        """(producer_idx, consumer_idx) pairs with reuse distance > 1.
+
+        Memoized: ops are fixed after construction, and per-span callers
+        (fold signatures, the verifier's segment sweep) would otherwise
+        rescan the whole graph once per segment."""
+        cached = getattr(self, "_skip_edges", None)
+        if cached is not None:
+            return list(cached)
         out = []
         for op in self.ops:
             ci = self._index[op.name]
@@ -233,7 +239,9 @@ class Graph:
                 pi = self._index[src]
                 if ci - pi > 1:
                     out.append((pi, ci))
-        return sorted(out)
+        out.sort()
+        self._skip_edges: List[Tuple[int, int]] = out
+        return list(out)
 
     def reuse_distances(self) -> List[int]:
         return [c - p for p, c in self.skip_edges()]

@@ -19,6 +19,7 @@ Three execution modes for a segment:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import List, Optional, Sequence, Tuple
 
@@ -104,8 +105,14 @@ def weight_dram_traffic(ops: Sequence[Op], dataflows: Sequence[Dataflow],
     return traffic
 
 
+@functools.lru_cache(maxsize=None)
 def chain_edges(depth: int) -> Tuple[Tuple[int, int], ...]:
-    """The implicit linear pipeline DAG: slot j feeds slot j+1."""
+    """The implicit linear pipeline DAG: slot j feeds slot j+1.
+
+    Memoized: the result is immutable and the ``pipeline_edges`` property
+    re-derives it on every access of every linear segment (depths are
+    bounded by ``DP_MAX_SPAN`` plus a few degenerate cases, so the cache
+    stays tiny)."""
     return tuple((j, j + 1) for j in range(depth - 1))
 
 

@@ -28,8 +28,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
-                    Tuple, TypeVar)
+from typing import (Any, Callable, Dict, List, Mapping, Optional,
+                    Sequence, Tuple, TypeVar, Union)
 
 from .graph import Graph
 from .hwconfig import HWConfig, PAPER_HW
@@ -139,7 +139,8 @@ class Objective:
 
     # -- constructors ---------------------------------------------------------
     @staticmethod
-    def lexicographic(*levels) -> "Objective":
+    def lexicographic(
+            *levels: Union[str, Tuple[str, float]]) -> "Objective":
         """``Objective.lexicographic(("latency_cycles", 0.25),
         "dram_bytes")`` — each level a metric name or (metric, slack)."""
         terms = tuple(Term(lv) if isinstance(lv, str) else Term(*lv)
@@ -236,7 +237,7 @@ class StrategySpec:
     supports_objective: bool = False
     supports_engine: bool = False
 
-    def plan(self, request: "PlanRequest"):
+    def plan(self, request: "PlanRequest") -> Any:
         """Invoke the strategy function with exactly the arguments its
         declared capabilities admit."""
         args = [request.graph, request.hw]
@@ -347,7 +348,7 @@ def jax_engine_available() -> bool:
 ENGINES = ("auto", "numpy", "jax")
 
 
-def graph_fingerprint(g: Graph) -> Tuple:
+def graph_fingerprint(g: Graph) -> Tuple[Any, ...]:
     """Stable, hashable identity of a graph's structure and shapes.
 
     ``Graph`` is mutable (and ``Op.dims`` is a dict), so plans cannot key
@@ -438,7 +439,7 @@ class PlanRequest:
 
     # -- identity -------------------------------------------------------------
     @property
-    def fingerprint(self) -> Tuple:
+    def fingerprint(self) -> Tuple[Any, ...]:
         return self._fingerprint           # type: ignore[attr-defined]
 
     @property
@@ -454,7 +455,7 @@ class PlanRequest:
         return self.max_bursts if self.sim_check else None
 
     @property
-    def key(self) -> Tuple:
+    def key(self) -> Tuple[Any, ...]:
         """The single cache key: everything that determines the plan."""
         return (self.fingerprint, self.hw, self.topology, self.strategy,
                 self.objective, self.constraints, self.sim_check,
@@ -469,7 +470,7 @@ class PlanRequest:
         return self.key == other.key
 
     # -- serialization (the PlanStore's on-disk identity) ---------------------
-    def to_json_dict(self) -> dict:
+    def to_json_dict(self) -> Dict[str, Any]:
         """Canonical JSON form of the request *identity* (no live graph)."""
         return {
             "graph_name": self.graph.name,
@@ -491,7 +492,7 @@ class PlanRequest:
         return content_token(self.to_json_dict())
 
 
-def content_token(doc) -> str:
+def content_token(doc: Any) -> str:
     """Cross-process content address of any JSON-able document (tuples
     allowed — canonicalized to lists): sha256 of the canonical JSON.
     The one hashing rule shared by every on-disk cache key (the
@@ -501,7 +502,7 @@ def content_token(doc) -> str:
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
-def _jsonable(obj):
+def _jsonable(obj: Any) -> Any:
     if isinstance(obj, (tuple, list)):
         return [_jsonable(x) for x in obj]
     if isinstance(obj, dict):
@@ -509,7 +510,7 @@ def _jsonable(obj):
     return obj
 
 
-def _objective_to_dict(o: Objective) -> dict:
+def _objective_to_dict(o: Objective) -> Dict[str, Any]:
     return {
         "kind": o.kind,
         "terms": [[t.metric, t.rel_slack] for t in o.terms],
@@ -517,12 +518,12 @@ def _objective_to_dict(o: Objective) -> dict:
     }
 
 
-def objective_from_dict(d: Mapping) -> Objective:
+def objective_from_dict(d: Mapping[str, Any]) -> Objective:
     return Objective(kind=d["kind"],
                      terms=tuple(Term(m, s) for m, s in d["terms"]),
                      weights=tuple((m, w) for m, w in d["weights"]))
 
 
-def constraint_from_dict(d: Mapping) -> Constraint:
+def constraint_from_dict(d: Mapping[str, Any]) -> Constraint:
     return Constraint(metric=d["metric"], max_value=d["max_value"],
                       max_ratio_to_best=d["max_ratio_to_best"])

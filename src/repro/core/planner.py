@@ -26,6 +26,7 @@ Baselines (Sec. V-C):
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import collections.abc
 import dataclasses
@@ -878,6 +879,41 @@ def _rebind_span(plan: SegmentPlan, g: Graph, i: int, j: int) -> SegmentPlan:
 
 _FOLD_SIG_CACHE: Dict[Tuple[int, int, int], Tuple[Graph, Tuple]] = {}
 
+#: per-op static signature (kind, sorted dims, stride), keyed by object
+#: identity — ops are immutable, and both the DP (overlapping spans) and
+#: the verifier (one sweep per plan right after planning, same objects)
+#: revisit the same ops many times
+_OP_SIG_CACHE: Dict[int, Tuple[Op, Tuple]] = {}
+
+#: per-graph skip index: (graph, producer array, (consumer, idx) array)
+#: so each span extracts its touching skips by bisection instead of
+#: scanning every skip edge in the graph
+_SKIP_INDEX_CACHE: Dict[int, Tuple[Graph, List, List]] = {}
+
+
+def _op_static_sig(op: Op) -> Tuple:
+    hit = _OP_SIG_CACHE.get(id(op))
+    if hit is not None and hit[0] is op:
+        return hit[1]
+    sig = (op.kind.value, tuple(sorted(op.dims.items())), op.stride)
+    if len(_OP_SIG_CACHE) >= _SPAN_MEMO_MAX:
+        _OP_SIG_CACHE.clear()
+    _OP_SIG_CACHE[id(op)] = (op, sig)
+    return sig
+
+
+def _skip_index(g: Graph) -> Tuple[List, List]:
+    hit = _SKIP_INDEX_CACHE.get(id(g))
+    if hit is not None and hit[0] is g:
+        return hit[1], hit[2]
+    edges = g.skip_edges()
+    by_p = [(p, c) for p, c in edges]          # already sorted by (p, c)
+    by_c = sorted(((c, p) for p, c in edges))
+    if len(_SKIP_INDEX_CACHE) >= _SPAN_MEMO_MAX:
+        _SKIP_INDEX_CACHE.clear()
+    _SKIP_INDEX_CACHE[id(g)] = (g, by_p, by_c)
+    return by_p, by_c
+
 
 def _fold_signature(g: Graph, seg: Segment) -> Tuple:
     """Everything ``_best_subsegmentation`` reads from a stage-1 segment,
@@ -894,17 +930,25 @@ def _fold_signature(g: Graph, seg: Segment) -> Tuple:
     hit = _FOLD_SIG_CACHE.get(key)
     if hit is not None and hit[0] is g:
         return hit[1]
+    s0, s1 = seg.start, seg.stop
     ops_sig = tuple(
-        (op.kind.value, tuple(sorted(op.dims.items())), op.stride,
-         tuple(sorted(g.index(s) - seg.start for s in op.inputs
-                      if seg.start <= g.index(s) < seg.stop)))
-        for op in g.ops[seg.start:seg.stop])
+        _op_static_sig(op)
+        + (tuple(sorted(g.index(s) - s0 for s in op.inputs
+                        if s0 <= g.index(s) < s1)),)
+        for op in g.ops[s0:s1])
+    # the union of "producer in span" and "consumer in span" ranges,
+    # deduped — identical membership to the full scan, found by bisection
+    by_p, by_c = _skip_index(g)
+    touching = {pc for pc in by_p[bisect.bisect_left(by_p, (s0,)):
+                                  bisect.bisect_left(by_p, (s1,))]}
+    touching.update((p, c) for c, p in
+                    by_c[bisect.bisect_left(by_c, (s0,)):
+                         bisect.bisect_left(by_c, (s1,))])
     skips = []
-    for p, c in g.skip_edges():
-        if p in seg or c in seg:
-            skips.append((p - seg.start if p in seg else -1,
-                          c - seg.start if c in seg else -1,
-                          g.ops[p].output_volume()))
+    for p, c in touching:
+        skips.append((p - s0 if s0 <= p < s1 else -1,
+                      c - s0 if s0 <= c < s1 else -1,
+                      g.ops[p].output_volume()))
     sig = (ops_sig, tuple(sorted(skips)))
     if len(_FOLD_SIG_CACHE) >= _SPAN_MEMO_MAX:
         _FOLD_SIG_CACHE.clear()

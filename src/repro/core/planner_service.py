@@ -37,7 +37,7 @@ from .graph import Graph
 from .hwconfig import HWConfig, PAPER_HW
 from .noc import Topology, flow_batch_cache_info
 from .plan_api import (PlanAPIDeprecationWarning, PlanRequest,
-                       get_strategy, graph_fingerprint, register_cache)
+                       get_strategy, register_cache)
 from .plan_api import cache_registry as _global_cache_registry
 from . import planner as _planner  # noqa: F401  (registers the built-ins)
 from .planner import PlanResult
@@ -67,9 +67,14 @@ class Planner:
 
     def __init__(self, maxsize: int = 128,
                  store: Optional[PlanStore] = None,
-                 span_shelf: Optional[Union[SpanShelf, str]] = None):
+                 span_shelf: Optional[Union[SpanShelf, str]] = None,
+                 verify: str = "off"):
+        if verify not in ("off", "warn", "strict"):
+            raise ValueError(f"verify={verify!r}; expected 'off', 'warn' "
+                             "or 'strict'")
         self.maxsize = maxsize
         self.store = store
+        self.verify = verify
         if span_shelf is not None:
             # the span shelf backs the DP's process-wide span cache, so
             # installing it here installs it for every planner in the
@@ -93,9 +98,19 @@ class Planner:
              hw: Optional[HWConfig] = None,
              topology: Optional[Topology] = None,
              strategy: Optional[str] = None,
-             sim_check: Optional[bool] = None) -> PlanResult:
+             sim_check: Optional[bool] = None,
+             verify: Optional[str] = None) -> PlanResult:
         """Plan one ``PlanRequest`` through the LRU cache (and the
         attached ``PlanStore``, if any).
+
+        ``verify`` gates the static post-condition check
+        (``core.verify.verify_plan`` — placement, routing, slot-DAG,
+        byte-conservation and fold invariants; never the simulator):
+        ``"off"`` skips it, ``"warn"`` emits a ``PlanVerifyWarning`` on
+        error-severity findings, ``"strict"`` raises ``PlanVerifyError``.
+        ``None`` defers to the planner-wide default set at construction.
+        Only freshly planned or store-loaded results are verified — an
+        LRU hit was already checked when it entered the cache.
 
         Passing a ``Graph`` plus the old positional knobs still works but
         is deprecated: the shim builds the equivalent request, so legacy
@@ -107,16 +122,21 @@ class Planner:
                 raise TypeError("pass either a PlanRequest or the legacy "
                                 "(graph, hw, topology, strategy, sim_check) "
                                 "arguments, not both")
-            return self._plan_request(request)
+            return self._plan_request(request, verify=verify)
         _legacy_warn("Planner.plan(graph, hw, topology, strategy, "
                      "sim_check)", "pass a PlanRequest")
         return self._plan_request(PlanRequest(
             graph=request, hw=hw if hw is not None else PAPER_HW,
             topology=topology,
             strategy=strategy if strategy is not None else "pipeorgan",
-            sim_check=bool(sim_check)))
+            sim_check=bool(sim_check)), verify=verify)
 
-    def _plan_request(self, request: PlanRequest) -> PlanResult:
+    def _plan_request(self, request: PlanRequest,
+                      verify: Optional[str] = None) -> PlanResult:
+        mode = self.verify if verify is None else verify
+        if mode not in ("off", "warn", "strict"):
+            raise ValueError(f"verify={mode!r}; expected 'off', 'warn' "
+                             "or 'strict'")
         with self._lock:
             if request in self._cache:
                 self._cache.move_to_end(request)
@@ -133,12 +153,28 @@ class Planner:
                 self._store_hits += 1
         if result is None:
             result = get_strategy(request.strategy).plan(request)
+        if mode != "off":
+            self._verify_result(result, request, mode)
         with self._lock:
             self._cache[request] = result
             self._cache.move_to_end(request)
             while len(self._cache) > self.maxsize:
                 self._cache.popitem(last=False)
         return result
+
+    @staticmethod
+    def _verify_result(result: PlanResult, request: PlanRequest,
+                       mode: str) -> None:
+        from .verify import PlanVerifyWarning, verify_plan
+        report = verify_plan(result, hw=request.hw,
+                             topology=request.topology)
+        if report.ok:
+            return
+        if mode == "strict":
+            report.raise_if_errors()
+        warnings.warn(f"plan verification found problems:\n"
+                      f"{report.summary()}", PlanVerifyWarning,
+                      stacklevel=4)
 
     def plan_all(self, graphs: Mapping[str, Graph],
                  template: Optional[PlanRequest] = None,

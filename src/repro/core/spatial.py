@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

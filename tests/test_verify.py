@@ -1,0 +1,468 @@
+"""Static plan verifier: corruption fixtures, clean golden sweeps, and
+the four integration points (planner gate, store/shelf read-through,
+lint CLI, strict regeneration without the simulator).
+
+The corruption factory seeds exactly one invariant violation per
+verifier pass and asserts the targeted pass reports exactly its expected
+finding code — the contract that makes the codes stable enough to grep
+CI logs for.
+"""
+import copy
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.configs.lm_graphs import lm_graphs
+from repro.configs.xrbench import all_tasks
+from repro.core import (PAPER_HW, PlanArtifact, PlanRequest, PlanStore,
+                        Planner, SpanShelf, Topology)
+from repro.core.multi_tenant import MultiTenantPlan, TenantPlan, band_hw
+from repro.core.plan_api import content_token
+from repro.core.planner import plan_pipeorgan, _fold_signature
+from repro.core.verify import (FINDING_CODES, PlanVerifyError,
+                               PlanVerifyWarning, pass_names, verify_plan,
+                               verify_segment)
+
+#: the corruption hosts, pinned: eye_segmentation's plan carries both a
+#: linear multi-op PE-to-PE segment (index 2) and a congested one (12).
+HOST_TASK = "eye_segmentation"
+LINEAR_SEG = 2
+CONGESTED_SEG = 12
+
+#: the folding host: a periodic LM stack whose plan contains
+#: fold-translated twin spans.
+FOLD_GRAPH = "rwkv6-1.6b-prefill-1024"
+
+
+@pytest.fixture(scope="module")
+def host_plan():
+    return plan_pipeorgan(all_tasks()[HOST_TASK], PAPER_HW, Topology.AMP)
+
+
+@pytest.fixture(scope="module")
+def fold_plan():
+    g = lm_graphs()[FOLD_GRAPH]
+    return g, plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+
+
+def _codes(report):
+    return sorted({f.code for f in report.findings})
+
+
+def _first_twin(g, plan):
+    seen = {}
+    for j, s in enumerate(plan.segments):
+        key = (_fold_signature(g, s.segment), s.segment.branches)
+        if key in seen:
+            return seen[key], j
+        seen[key] = j
+    raise AssertionError("fold host plan has no translated twins")
+
+
+# ---------------------------------------------------------------------------
+# the corruption factory: one seeded violation per pass
+# ---------------------------------------------------------------------------
+# Corruptions REPLACE sub-objects (dataclasses.replace / new lists)
+# rather than mutating in place: deepcopy preserves the fold twins'
+# reference sharing, so an in-place edit would corrupt every twin
+# identically and the violation would cancel out.
+
+
+def corrupt(plan, kind):
+    p = copy.deepcopy(plan)
+    seg = p.segments[LINEAR_SEG]
+    if kind == "overlapping_pes":            # placement -> P001
+        seg.pe_alloc = [0] + list(seg.pe_alloc[1:])
+    elif kind == "cyclic_dag":               # graph -> G001
+        seg.edges = ((0, 1), (1, 0))
+    elif kind == "granularity":              # granularity -> G003
+        gr = seg.granularities[0]
+        seg.granularities = (
+            [dataclasses.replace(gr, elements=gr.elements * 2)]
+            + list(seg.granularities[1:]))
+    elif kind == "dram_bytes":               # conservation -> G005
+        seg.cost = dataclasses.replace(
+            seg.cost, dram_bytes=seg.cost.dram_bytes + 1e6)
+    elif kind == "noc_stats":                # routing -> R003
+        seg.noc = dataclasses.replace(
+            seg.noc, worst_channel_load=seg.noc.worst_channel_load * 2)
+    elif kind == "over_capacity":            # routing -> R001
+        cseg = p.segments[CONGESTED_SEG]
+        cseg.cost = dataclasses.replace(cseg.cost, congested=False)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+PLAN_CORRUPTIONS = [
+    ("overlapping_pes", "placement", "P001"),
+    ("cyclic_dag", "graph", "G001"),
+    ("granularity", "granularity", "G003"),
+    ("dram_bytes", "conservation", "G005"),
+    ("noc_stats", "routing", "R003"),
+    ("over_capacity", "routing", "R001"),
+]
+
+
+@pytest.mark.parametrize("kind,pass_name,code",
+                         PLAN_CORRUPTIONS,
+                         ids=[c[0] for c in PLAN_CORRUPTIONS])
+def test_seeded_corruption_yields_exact_code(host_plan, kind, pass_name,
+                                             code):
+    bad = corrupt(host_plan, kind)
+    rep = verify_plan(bad, PAPER_HW, Topology.AMP, passes=[pass_name])
+    assert _codes(rep) == [code], rep.summary()
+    assert all(f.severity == "error" for f in rep.findings)
+    # and the full default run still surfaces it
+    full = verify_plan(bad, PAPER_HW, Topology.AMP)
+    assert code in _codes(full), full.summary()
+
+
+def test_uncorrupted_host_plan_is_clean(host_plan):
+    rep = verify_plan(host_plan, PAPER_HW, Topology.AMP)
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+def test_fold_corruption_yields_a005(fold_plan):
+    g, plan = fold_plan
+    i, j = _first_twin(g, plan)
+    bad = copy.deepcopy(plan)
+    seg = bad.segments[j]
+    seg.cost = dataclasses.replace(seg.cost,
+                                   sram_bytes=seg.cost.sram_bytes + 1.0)
+    rep = verify_plan(bad, PAPER_HW, Topology.AMP, passes=["fold"])
+    assert _codes(rep) == ["A005"], rep.summary()
+    assert f"segment[{i}]" in rep.findings[0].message
+    # the one corruption is also the only finding of a full run
+    assert _codes(verify_plan(bad, PAPER_HW, Topology.AMP)) == ["A005"]
+
+
+# ---------------------------------------------------------------------------
+# artifact corruptions (schema / identity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def host_artifact_doc(host_plan):
+    req = PlanRequest(graph=all_tasks()[HOST_TASK], hw=PAPER_HW,
+                      topology=Topology.AMP)
+    art = PlanArtifact.from_plan(host_plan, req)
+    return json.loads(art.to_json())
+
+
+def test_clean_artifact_doc(host_artifact_doc):
+    rep = verify_plan(host_artifact_doc)
+    assert rep.ok and not rep.findings, rep.summary()
+
+
+@pytest.mark.parametrize("field,value,code", [
+    ("kind", "not-a-plan", "A001"),
+    ("schema_version", 0, "A002"),
+    ("token", "0" * 64, "A003"),
+], ids=["wrong_kind", "stale_schema", "token_mismatch"])
+def test_artifact_doc_corruptions(host_artifact_doc, field, value, code):
+    doc = copy.deepcopy(host_artifact_doc)
+    doc[field] = value
+    assert code in _codes(verify_plan(doc))
+
+
+def test_request_plan_mismatch_yields_a004(host_artifact_doc):
+    doc = copy.deepcopy(host_artifact_doc)
+    doc["request"]["graph_name"] = "somebody-else"
+    # re-token the edited request so A003 cannot mask the A004
+    doc["token"] = content_token(doc["request"])
+    assert _codes(verify_plan(doc)) == ["A004"]
+
+
+def test_undecodable_body_yields_a002(host_artifact_doc):
+    doc = copy.deepcopy(host_artifact_doc)
+    del doc["plan"]["segments"][0]["cost"]
+    assert "A002" in _codes(verify_plan(doc))
+
+
+# ---------------------------------------------------------------------------
+# tenancy corruptions (P003 / P004)
+# ---------------------------------------------------------------------------
+
+
+def _tenant(name, plan, band):
+    return TenantPlan(name=name, share=0.5, priority=0, plan=plan,
+                      band=band, latency_cycles=plan.latency_cycles,
+                      completion_cycles=plan.latency_cycles,
+                      dram_bytes=plan.dram_bytes, dram_bw_fraction=0.5,
+                      link_interference=0.0)
+
+
+def _mt(tenants):
+    mk = max(t.latency_cycles for t in tenants)
+    return MultiTenantPlan(
+        mode="spatial", tenants=list(tenants), makespan_cycles=mk,
+        dram_bytes=sum(t.dram_bytes for t in tenants), energy=0.0,
+        serialized_cycles=sum(t.latency_cycles for t in tenants),
+        serialized_dram=sum(t.dram_bytes for t in tenants),
+        weighted_completion_cycles=mk)
+
+
+def test_spatial_tenant_without_band_yields_p003():
+    g = all_tasks()["keyword_spotting"]
+    w = PAPER_HW.pe_cols // 2
+    plan = plan_pipeorgan(g, band_hw(PAPER_HW, w), Topology.AMP)
+    mt = _mt([_tenant("a", plan, None)])
+    rep = verify_plan(mt, PAPER_HW, Topology.AMP, passes=["tenancy"])
+    assert _codes(rep) == ["P003"], rep.summary()
+
+
+def test_band_overlap_yields_p003():
+    g = all_tasks()["keyword_spotting"]
+    w = PAPER_HW.pe_cols // 2
+    plan = plan_pipeorgan(g, band_hw(PAPER_HW, w), Topology.AMP)
+    mt = _mt([_tenant("a", plan, (0, w)),
+              _tenant("b", plan, (w - 1, 2 * w - 1))])
+    rep = verify_plan(mt, PAPER_HW, Topology.AMP, passes=["tenancy"])
+    assert "P003" in _codes(rep), rep.summary()
+
+
+def test_band_link_overlap_yields_p004():
+    # tenant a's plan spans the WHOLE array but its band claims only the
+    # left half: its routes trespass into tenant b's columns
+    g = all_tasks()[HOST_TASK]
+    w = PAPER_HW.pe_cols // 2
+    wide = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+    narrow = plan_pipeorgan(g, band_hw(PAPER_HW, w), Topology.AMP)
+    mt = _mt([_tenant("a", wide, (0, w)),
+              _tenant("b", narrow, (w, 2 * w))])
+    rep = verify_plan(mt, PAPER_HW, Topology.AMP, passes=["tenancy"])
+    assert "P004" in _codes(rep), rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# clean sweep over every committed golden plan
+# ---------------------------------------------------------------------------
+
+
+def test_all_golden_plans_verify_clean():
+    graphs = dict(all_tasks())
+    graphs.update(lm_graphs())
+    dirty = []
+    for name, g in sorted(graphs.items()):
+        plan = plan_pipeorgan(g, PAPER_HW, Topology.AMP)
+        rep = verify_plan(plan, PAPER_HW, Topology.AMP)
+        if rep.findings:
+            dirty.append((name, rep.summary()))
+    assert not dirty, dirty
+
+
+def test_baseline_strategies_verify_clean():
+    g = all_tasks()["keyword_spotting"]
+    planner = Planner()
+    for strategy in ("pipeorgan-linear", "pipeorgan-uniform", "tangram",
+                     "simba", "layerbylayer"):
+        plan = planner.plan(PlanRequest(graph=g, hw=PAPER_HW,
+                                        strategy=strategy))
+        rep = verify_plan(plan, PAPER_HW)
+        assert not rep.errors, (strategy, rep.summary())
+
+
+# ---------------------------------------------------------------------------
+# integration point 1: the Planner gate
+# ---------------------------------------------------------------------------
+
+
+def test_planner_strict_gate_plans_clean():
+    g = all_tasks()["keyword_spotting"]
+    planner = Planner(verify="strict")
+    plan = planner.plan(PlanRequest(graph=g, hw=PAPER_HW,
+                                    topology=Topology.AMP))
+    assert plan.segments
+
+
+def test_planner_rejects_bad_mode():
+    with pytest.raises(ValueError, match="verify"):
+        Planner(verify="loud")
+    with pytest.raises(ValueError, match="verify"):
+        Planner().plan(PlanRequest(graph=all_tasks()["keyword_spotting"]),
+                       verify="loud")
+
+
+def test_planner_gate_fires_on_corrupt_store_load(tmp_path, host_plan):
+    g = all_tasks()[HOST_TASK]
+    req = PlanRequest(graph=g, hw=PAPER_HW, topology=Topology.AMP)
+    store = PlanStore(tmp_path)
+    store.save(req, corrupt(host_plan, "dram_bytes"))
+    strict = Planner(store=PlanStore(tmp_path), verify="strict")
+    with pytest.raises(PlanVerifyError) as exc:
+        strict.plan(req)
+    assert any(f.code == "G005" for f in exc.value.report.findings)
+    warn = Planner(store=PlanStore(tmp_path), verify="warn")
+    with pytest.warns(PlanVerifyWarning):
+        plan = warn.plan(req)
+    assert plan.segments     # warn mode still serves the plan
+
+
+def test_strict_regeneration_without_simulator(monkeypatch):
+    """The acceptance pin: a full golden-suite regeneration under
+    ``verify='strict'`` must never touch the simulator."""
+    import repro.core.simulator as sim
+
+    def _boom(*a, **k):
+        raise AssertionError("verifier invoked the simulator")
+
+    for fn in ("simulate_segment", "simulate_plan", "simulate_reference",
+               "validate_plan"):
+        monkeypatch.setattr(sim, fn, _boom)
+    planner = Planner(verify="strict")
+    graphs = dict(all_tasks())
+    graphs.update(lm_graphs())
+    for name, g in sorted(graphs.items()):
+        plan = planner.plan(PlanRequest(graph=g, hw=PAPER_HW,
+                                        topology=Topology.AMP))
+        assert plan.segments, name
+
+
+# ---------------------------------------------------------------------------
+# integration point 2: store / shelf read-through verification
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_stored_artifact(store, req):
+    path = store.path_for(req)
+    doc = json.loads(path.read_text())
+    seg = doc["plan"]["segments"][LINEAR_SEG]
+    seg["cost"]["dram_bytes"] += 1e6
+    path.write_text(json.dumps(doc))
+
+
+def test_store_read_through_verification(tmp_path, host_plan):
+    g = all_tasks()[HOST_TASK]
+    req = PlanRequest(graph=g, hw=PAPER_HW, topology=Topology.AMP)
+    PlanStore(tmp_path).save(req, host_plan)
+    _corrupt_stored_artifact(PlanStore(tmp_path), req)
+
+    assert PlanStore(tmp_path).load(req) is not None      # off: serves
+    with pytest.raises(ValueError, match="verify"):
+        PlanStore(tmp_path, verify="shout")
+    with pytest.warns(PlanVerifyWarning):
+        assert PlanStore(tmp_path, verify="warn").load(req) is not None
+    with pytest.raises(PlanVerifyError) as exc:
+        PlanStore(tmp_path, verify="strict").load(req)
+    assert any(f.code == "G005" for f in exc.value.report.findings)
+
+
+def test_shelf_read_through_verification(tmp_path, host_plan):
+    seg = host_plan.segments[LINEAR_SEG]
+    token = "ab" * 32
+    SpanShelf(tmp_path).save(token, seg)
+    path = SpanShelf(tmp_path).path_for(token)
+    doc = json.loads(path.read_text())
+    doc["plan"]["granularities"][0]["elements"] *= 2
+    path.write_text(json.dumps(doc))
+
+    assert SpanShelf(tmp_path).load(token) is not None
+    with pytest.warns(PlanVerifyWarning):
+        assert SpanShelf(tmp_path, verify="warn").load(token) is not None
+    with pytest.raises(PlanVerifyError) as exc:
+        SpanShelf(tmp_path, verify="strict").load(token)
+    assert any(f.code == "G003" for f in exc.value.report.findings)
+
+
+def test_verify_segment_without_hw(host_plan):
+    seg = host_plan.segments[LINEAR_SEG]
+    rep = verify_segment(seg)
+    assert rep.ok and rep.passes_run == ("graph", "granularity")
+    rep_hw = verify_segment(seg, PAPER_HW, Topology.AMP)
+    assert rep_hw.ok and "routing" in rep_hw.passes_run, rep_hw.summary()
+
+
+# ---------------------------------------------------------------------------
+# satellite: orphaned tmp hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_store_tmp_hygiene(tmp_path, host_plan):
+    g = all_tasks()[HOST_TASK]
+    req = PlanRequest(graph=g, hw=PAPER_HW, topology=Topology.AMP)
+    store = PlanStore(tmp_path)
+    store.save(req, host_plan)
+    orphan = tmp_path / "dead.plan.json.tmp"
+    orphan.write_text("{half-written")
+    assert len(store) == 1
+    assert list(store.scan()) == [req.cache_token()]
+    assert store.orphaned_tmp() == [orphan]
+    assert store.clean_tmp() == [orphan]
+    assert not orphan.exists() and store.orphaned_tmp() == []
+
+
+def test_shelf_tmp_hygiene(tmp_path, host_plan):
+    shelf = SpanShelf(tmp_path)
+    shelf.save("cd" * 32, host_plan.segments[LINEAR_SEG])
+    orphan = tmp_path / ("ef" * 32 + ".span.12345.tmp")
+    orphan.write_text("{half")
+    assert shelf.orphaned_tmp() == [orphan]
+    assert shelf.load("cd" * 32) is not None
+    assert shelf.clean_tmp() == [orphan] and not orphan.exists()
+
+
+# ---------------------------------------------------------------------------
+# integration point 3: the lint CLI
+# ---------------------------------------------------------------------------
+
+
+def test_lint_cli_directory_mode(tmp_path, host_plan, capsys):
+    from repro.launch import lint
+    g = all_tasks()[HOST_TASK]
+    req = PlanRequest(graph=g, hw=PAPER_HW, topology=Topology.AMP)
+    store = PlanStore(tmp_path)
+    store.save(req, host_plan)
+    (tmp_path / "orphan.plan.json.tmp").write_text("{")
+    assert lint.main([str(tmp_path)]) == 0
+    assert lint.main([str(tmp_path), "--strict"]) == 1    # orphan tmp
+    assert lint.main([str(tmp_path), "--clean", "--strict"]) == 0
+    assert not (tmp_path / "orphan.plan.json.tmp").exists()
+
+    _corrupt_stored_artifact(store, req)
+    assert lint.main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "G005" in out
+
+
+def test_lint_cli_single_artifact_file(tmp_path, host_artifact_doc):
+    from repro.launch import lint
+    path = tmp_path / "one.json"
+    path.write_text(json.dumps(host_artifact_doc))
+    assert lint.main([str(path)]) == 0
+    doc = copy.deepcopy(host_artifact_doc)
+    doc["schema_version"] = 0
+    path.write_text(json.dumps(doc))
+    assert lint.main([str(path)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# report plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_finding_codes_catalog_matches_passes():
+    assert set(p for p, _ in FINDING_CODES.values()) <= set(pass_names())
+    assert set(FINDING_CODES) == {
+        "P001", "P002", "P003", "P004", "R001", "R002", "R003",
+        "G001", "G002", "G003", "G004", "G005",
+        "A001", "A002", "A003", "A004", "A005"}
+
+
+def test_pass_selection_validates_names(host_plan):
+    with pytest.raises(ValueError, match="unknown verifier pass"):
+        verify_plan(host_plan, PAPER_HW, passes=["no-such-pass"])
+    rep = verify_plan(host_plan, PAPER_HW, skip=["routing", "fold"])
+    assert "routing" not in rep.passes_run
+
+
+def test_report_summary_and_raise(host_plan):
+    bad = corrupt(host_plan, "dram_bytes")
+    rep = verify_plan(bad, PAPER_HW, Topology.AMP, passes=["conservation"])
+    assert "FAIL" in rep.summary() and "G005" in rep.summary()
+    with pytest.raises(PlanVerifyError, match="G005"):
+        rep.raise_if_errors()
+    clean = verify_plan(host_plan, PAPER_HW, passes=["conservation"])
+    assert clean.raise_if_errors() is clean

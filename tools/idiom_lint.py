@@ -1,0 +1,195 @@
+#!/usr/bin/env python
+"""AST-based idiom lint for the planner codebase (pure stdlib).
+
+Three repo-specific rules that generic linters cannot express:
+
+  I001  every strategy name registered via ``register_strategy("<name>",
+        ...)`` in ``src/repro`` must appear as a string literal somewhere
+        under ``tests/`` — a registered strategy nobody's parity/golden
+        tests exercise is dead weight or, worse, silently broken.
+  I002  the curated vectorized modules (``noc.py``, ``simulator.py``,
+        ``planner.py``) must keep their ``*_reference`` twins: each must
+        define at least one top-level ``<base>_reference`` function, and
+        every ``<base>_reference`` must sit next to a top-level
+        ``<base>`` — the differential-testing contract (vectorized fast
+        path vs. readable oracle) that the parity suites rely on.
+  I003  no unseeded ``np.random`` in ``src/repro/core``: the planner and
+        analysis layer must be deterministic, so only explicitly seeded
+        constructors (``np.random.default_rng(seed)`` /
+        ``np.random.RandomState(seed)``) are allowed; the legacy global
+        state (``np.random.rand`` etc., or a zero-argument constructor)
+        is flagged.
+
+Usage:  python tools/idiom_lint.py [--root REPO_ROOT]
+Exit status 1 when any rule fires.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+#: modules under src/repro/core that pair a vectorized implementation
+#: with a scalar ``*_reference`` oracle (rule I002).
+REFERENCE_TWIN_MODULES = ("noc.py", "simulator.py", "planner.py")
+
+#: seeded-constructor allowlist for rule I003; each still needs >= 1
+#: positional argument (the seed).
+SEEDED_CTORS = {"default_rng", "RandomState"}
+
+
+def _parse(path: Path) -> ast.AST:
+    return ast.parse(path.read_text(), filename=str(path))
+
+
+def _iter_py(root: Path) -> List[Path]:
+    return sorted(p for p in root.rglob("*.py") if p.is_file())
+
+
+# -- I001 -------------------------------------------------------------------
+
+
+def registered_strategy_names(src_root: Path) -> Dict[str, Path]:
+    """Strategy-name literal -> file registering it."""
+    out: Dict[str, Path] = {}
+    for path in _iter_py(src_root):
+        for node in ast.walk(_parse(path)):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None)
+            if name != "register_strategy" or not node.args:
+                continue
+            first = node.args[0]
+            if isinstance(first, ast.Constant) and isinstance(first.value,
+                                                              str):
+                out.setdefault(first.value, path)
+    return out
+
+
+def test_string_literals(tests_root: Path) -> Set[str]:
+    out: Set[str] = set()
+    for path in _iter_py(tests_root):
+        for node in ast.walk(_parse(path)):
+            if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                             str):
+                out.add(node.value)
+    return out
+
+
+def check_strategies_tested(src_root: Path,
+                            tests_root: Path) -> List[str]:
+    tested = test_string_literals(tests_root)
+    problems = []
+    for name, path in sorted(registered_strategy_names(src_root).items()):
+        if name not in tested:
+            problems.append(
+                f"I001 {path}: strategy {name!r} is registered but never "
+                f"named by any test under {tests_root}")
+    return problems
+
+
+# -- I002 -------------------------------------------------------------------
+
+
+def check_reference_twins(core_root: Path) -> List[str]:
+    problems = []
+    for mod in REFERENCE_TWIN_MODULES:
+        path = core_root / mod
+        if not path.exists():
+            problems.append(f"I002 {path}: curated module missing")
+            continue
+        top = [n.name for n in _parse(path).body  # type: ignore[attr-defined]
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        refs = [n for n in top if n.endswith("_reference")]
+        if not refs:
+            problems.append(
+                f"I002 {path}: no top-level *_reference oracle — the "
+                "vectorized/reference twin contract is broken")
+        for ref in refs:
+            base = ref[:-len("_reference")]
+            # exact twin (analyze/analyze_reference) or prefix family
+            # (simulate_reference oracles simulate_plan/simulate_segment)
+            if base not in top and not any(
+                    n.startswith(base + "_") and not n.endswith("_reference")
+                    for n in top):
+                problems.append(
+                    f"I002 {path}: {ref}() has no top-level {base}() or "
+                    f"{base}_*() twin")
+    return problems
+
+
+# -- I003 -------------------------------------------------------------------
+
+
+def _np_random_attr(node: ast.AST) -> str:
+    """'' unless node is an ``np.random.<X>`` / ``numpy.random.<X>``
+    attribute chain; then X."""
+    if not isinstance(node, ast.Attribute):
+        return ""
+    mid = node.value
+    if (isinstance(mid, ast.Attribute) and mid.attr == "random"
+            and isinstance(mid.value, ast.Name)
+            and mid.value.id in ("np", "numpy")):
+        return node.attr
+    return ""
+
+
+def check_seeded_random(core_root: Path) -> List[str]:
+    problems = []
+    for path in _iter_py(core_root):
+        tree = _parse(path)
+        calls = {id(n.func): n for n in ast.walk(tree)
+                 if isinstance(n, ast.Call)}
+        for node in ast.walk(tree):
+            attr = _np_random_attr(node)
+            if not attr:
+                continue
+            call = calls.get(id(node))
+            line = getattr(node, "lineno", 0)
+            if attr in SEEDED_CTORS:
+                if call is not None and (call.args or call.keywords):
+                    continue        # explicitly seeded constructor: fine
+                problems.append(
+                    f"I003 {path}:{line}: np.random.{attr}() without an "
+                    "explicit seed")
+            else:
+                problems.append(
+                    f"I003 {path}:{line}: np.random.{attr} uses the global "
+                    "unseeded RNG state; use np.random.default_rng(seed)")
+    return problems
+
+
+# -- driver -----------------------------------------------------------------
+
+
+def run(root: Path) -> List[str]:
+    src_root = root / "src" / "repro"
+    core_root = src_root / "core"
+    tests_root = root / "tests"
+    problems: List[str] = []
+    problems += check_strategies_tested(src_root, tests_root)
+    problems += check_reference_twins(core_root)
+    problems += check_seeded_random(core_root)
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parents[1],
+                    help="repository root (default: this repo)")
+    args = ap.parse_args(argv)
+    problems = run(args.root)
+    for p in problems:
+        print(p)
+    n = len(problems)
+    print(f"idiom_lint: {n} problem{'s' if n != 1 else ''}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
